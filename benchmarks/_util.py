@@ -1,0 +1,60 @@
+"""Benchmark plumbing: subprocess workers with their own device counts.
+
+Multi-device benches re-exec themselves with XLA_FLAGS set (the dry-run rule:
+never force device counts globally — pytest and single-device benches must
+see 1 CPU device).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+REPO = Path(__file__).resolve().parents[1]
+RESULTS = REPO / "results" / "bench"
+
+
+def run_worker(module: str, devices: int, args: List[str],
+               timeout: int = 1200) -> Dict[str, Any]:
+    """Run ``python -m <module> --worker <args>`` with `devices` host devices;
+    the worker prints one JSON line on stdout (last line)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = f"{REPO / 'src'}:{REPO}"
+    out = subprocess.run(
+        [sys.executable, "-m", module, "--worker", *args],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=REPO)
+    if out.returncode != 0:
+        raise RuntimeError(f"worker {module} failed:\n{out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def emit(obj: Dict[str, Any]) -> None:
+    """Worker-side: print the result record as the last stdout line."""
+    print(json.dumps(obj))
+
+
+def save(name: str, record: Dict[str, Any]) -> Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    p = RESULTS / f"{name}.json"
+    p.write_text(json.dumps(record, indent=1))
+    return p
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of fn(*args) (jax results block_until_ready'd)."""
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]

@@ -1,0 +1,104 @@
+"""Benchmark driver: one module per paper table (DESIGN.md §7).
+
+  table1_halo_memory  paper Table 1 (halo % of memory vs ranks)   exact match
+  table2_heat2d       paper Tables 2-3 / Fig 4 (Heat2D schedules) measured
+  table4_creams       paper Table 4 (CREAMS RK3 stencil)          measured
+  hpccg               paper §4.3 / Fig 8 (taskified CG)           measured
+  bench_overlap       Fig 1 concept (collective matmul ring)      measured
+  lm_step             HDOT grad-sync buckets on an LM step        measured
+
+Results land in results/bench/*.json + a markdown summary. Run:
+  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (bench_overlap, hpccg, lm_step, table1_halo_memory,
+                        table2_heat2d, table4_creams)
+from benchmarks._util import RESULTS, save
+
+SUITES = {
+    "table1_halo_memory": lambda quick: table1_halo_memory.run(),
+    "table2_heat2d": lambda quick: table2_heat2d.run(
+        sizes=(1, 2) if quick else (1, 2, 4, 8),
+        n=256 if quick else 1024, iters=10 if quick else 50),
+    "table4_creams": lambda quick: table4_creams.run(
+        sizes=(1, 2) if quick else (1, 2, 4, 8),
+        nz=256 if quick else 1024, steps=4 if quick else 10),
+    "hpccg": lambda quick: hpccg.run(
+        sizes=(1, 2) if quick else (1, 2, 4, 8),
+        n=24 if quick else 48, iters=10 if quick else 25),
+    "bench_overlap": lambda quick: bench_overlap.run(
+        sizes=(2,) if quick else (4, 8),
+        s=1024 if quick else 4096, m=1024 if quick else 2048,
+        n=1024 if quick else 2048),
+    "lm_step": lambda quick: lm_step.run(sizes=(2,) if quick else (2, 8)),
+}
+
+
+def _summary_md(records: dict) -> str:
+    lines = ["# Benchmark summary", ""]
+    for name, rec in records.items():
+        lines.append(f"## {name} — {rec.get('table', '')}")
+        if "error" in rec:
+            lines.append(f"**FAILED**: {rec['error']}")
+            lines.append("")
+            continue
+        rows = rec.get("rows", [])
+        if rows and "ranks" in rows[0]:
+            lines.append("| ranks | halo % | paper % | match |")
+            lines.append("|---|---|---|---|")
+            for r in rows:
+                lines.append(f"| {r['ranks']} | {r['halo_pct']} | "
+                             f"{r['paper_pct']} | {r['match']} |")
+        elif rows and "two_phase" in rows[0]:
+            key = next(k for k in ("sweeps_per_s", "steps_per_s",
+                                   "iters_per_s", "seconds")
+                       if k in rows[0]["two_phase"])
+            lines.append(f"| devices | two_phase {key} | hdot {key} | "
+                         "hdot/two_phase |")
+            lines.append("|---|---|---|---|")
+            for r in rows:
+                tp, hd = r["two_phase"][key], r["hdot"][key]
+                ratio = (hd / tp) if key != "seconds" else (tp / hd)
+                lines.append(f"| {r['devices']} | {tp:.2f} | {hd:.2f} | "
+                             f"{ratio:.2f}x |")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", choices=sorted(SUITES), default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes / few devices (CI-sized)")
+    args = ap.parse_args()
+
+    todo = {args.only: SUITES[args.only]} if args.only else SUITES
+    records = {}
+    rc = 0
+    for name, fn in todo.items():
+        t0 = time.time()
+        print(f"[bench] {name} ...", flush=True)
+        try:
+            rec = fn(args.quick)
+            rec["elapsed_s"] = time.time() - t0
+            save(name, rec)
+            records[name] = rec
+            print(f"[bench] {name} OK ({rec['elapsed_s']:.1f}s)")
+        except Exception as e:
+            records[name] = {"error": f"{type(e).__name__}: {e}"}
+            traceback.print_exc()
+            rc = 1
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    md = _summary_md(records)
+    (RESULTS / "summary.md").write_text(md)
+    print(md)
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

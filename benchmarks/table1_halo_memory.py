@@ -1,0 +1,38 @@
+"""Paper Table 1: halo memory overhead of the 2-D Gauss-Seidel domain as the
+rank count grows (128x128 grid, horizontal 1-D decomposition, halo width 1).
+
+Pure domain arithmetic via repro.core.domain — the same code path the apps
+use — checked against the paper's published percentages.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+PAPER = {2: 1.6, 4: 4.7, 8: 10.9, 16: 23.4, 32: 48.4}  # % of data in halo
+
+
+def run() -> Dict[str, Any]:
+    from repro.core.domain import halo_fraction
+
+    rows = []
+    for ranks, paper_pct in PAPER.items():
+        data, halo, frac = halo_fraction((128, 128), (ranks, 1), width=1)
+        rows.append({
+            "ranks": ranks, "local_data": data, "halo_cells": halo,
+            "halo_pct": round(100 * frac, 1), "paper_pct": paper_pct,
+            "match": abs(100 * frac - paper_pct) < 0.1,
+        })
+    return {"table": "paper Table 1", "rows": rows,
+            "all_match": all(r["match"] for r in rows)}
+
+
+def main() -> None:
+    rec = run()
+    for r in rec["rows"]:
+        print(f"ranks={r['ranks']:3d} halo={r['halo_pct']:5.1f}% "
+              f"paper={r['paper_pct']:5.1f}% match={r['match']}")
+    print("all_match:", rec["all_match"])
+
+
+if __name__ == "__main__":
+    main()

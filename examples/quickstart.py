@@ -1,0 +1,54 @@
+"""Quickstart: the HDOT idea in 60 lines.
+
+1. ONE partition scheme (`decompose_grid`) reused at process level (mesh
+   shards) and task level (subdomains) — paper §3.2.
+2. A stencil solve under the two schedules: two_phase (the MPI+OpenMP
+   baseline: exchange, barrier, compute) vs hdot (boundary/interior split,
+   comm rides the dataflow) — paper Code 2 vs Code 4.
+3. The same discipline on an LM: per-bucket gradient reductions.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.domain import Domain, decompose_grid
+from repro.core.stencil import heat2d_init, heat2d_solve
+from repro.launch.mesh import make_mesh
+
+# --- 1. hierarchical over-decomposition --------------------------------------
+print("== 1. one scheme, two levels ==")
+boxes = decompose_grid((128, 128), (4, 1))          # process level (4 "ranks")
+print(f"process level: {len(boxes)} domains, shapes {sorted({b.shape for b in boxes})}")
+dom = Domain.for_rank((128, 128), (4, 1), rank=1)
+subs = dom.over_decompose((4, 1))                   # task level, SAME scheme
+n_boundary = sum(1 for s in subs if s.is_boundary(dim=0))
+print(f"task level:    {len(subs)} subdomains per domain, "
+      f"{n_boundary} of them boundary (own a comm task)")
+
+# --- 2. two schedules, identical numerics -------------------------------------
+print("\n== 2. Heat2D: two_phase vs hdot ==")
+mesh = make_mesh((jax.device_count(),), ("data",))
+u0 = heat2d_init(128, 128)
+u_tp, res_tp = heat2d_solve(u0, mesh, "data", iters=50, mode="two_phase")
+u_hd, res_hd = heat2d_solve(u0, mesh, "data", iters=50, mode="hdot")
+print(f"residual after 50 sweeps: two_phase={float(res_tp[-1]):.3e} "
+      f"hdot={float(res_hd[-1]):.3e}")
+print(f"fields identical: {np.allclose(np.asarray(u_tp), np.asarray(u_hd))}")
+
+# --- 3. the same idea on an LM step -------------------------------------------
+print("\n== 3. gradient domain over-decomposition ==")
+from repro.core.overlap import make_buckets
+from repro.config.registry import get_arch
+from repro.models.model import ModelOptions, build_model
+
+cfg = get_arch("internlm2-1.8b").reduced()
+model = build_model(cfg, ModelOptions(attn_impl="dense"))
+params = model.init(jax.random.PRNGKey(0))
+buckets = make_buckets(params, 8)
+sizes = [sum(int(l.size) for _, l in b) for b in buckets]
+print(f"{len(jax.tree.leaves(params))} gradient leaves -> {len(buckets)} "
+      f"size-balanced buckets (subdomains): {sizes}")
+print("each bucket is an independent all-reduce the scheduler can overlap "
+      "with backward compute — no two-phase barrier.")

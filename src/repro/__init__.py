@@ -1,0 +1,23 @@
+"""repro: HDOT-JAX — Hierarchical Domain Over-decomposition with Tasking, adapted to JAX/TPU.
+
+Paper: "HDOT — an Approach Towards Productive Programming of Hybrid Applications"
+(Ciesko, Martinez-Ferrer, Penacoba Veigas, Teruel, Beltran; BSC, JPDC 2019).
+
+Public API (lazy — importing `repro` must stay cheap and must NOT touch jax device state):
+    repro.config      -- config dataclasses + registry (--arch <id>)
+    repro.core        -- the paper's contribution (domain / halo / overlap / reductions)
+    repro.models      -- architecture zoo
+    repro.kernels     -- Pallas TPU kernels (+ pure-jnp oracles)
+"""
+
+__version__ = "1.0.0"
+
+__all__ = ["config", "core", "models", "kernels", "__version__"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        import importlib
+
+        return importlib.import_module(f"repro.{name}")
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

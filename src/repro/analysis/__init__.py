@@ -1,0 +1,6 @@
+"""Roofline analysis: HLO collective parsing + three-term roofline model."""
+from repro.analysis.hlo import collective_bytes, parse_collectives
+from repro.analysis.roofline import HW, RooflineReport, roofline
+
+__all__ = ["collective_bytes", "parse_collectives", "HW", "RooflineReport",
+           "roofline"]

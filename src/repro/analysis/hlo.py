@@ -1,0 +1,178 @@
+"""Parse collective traffic out of optimized HLO text.
+
+``cost_analysis()`` has no collective term, so the dry-run derives it from the
+compiled module: every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` /
+``all-to-all`` / ``collective-permute`` op definition is located, its result
+shape(s) and replica-group size parsed, and converted to per-chip wire bytes
+under the standard ring model:
+
+  op                 result vs operand     wire bytes per chip (ring)
+  all-gather         R = g * O             O * (g-1)            ~= R
+  reduce-scatter     R = O / g             R * (g-1)            ~= O
+  all-reduce         R = O                 2 * O * (g-1) / g    ~= 2 O
+  all-to-all         R = O                 O * (g-1) / g        ~= O
+  collective-permute R = O                 O
+
+SPMD modules are per-device, so parsed sizes are already per-chip. Both the
+raw operand-sum (the brief's metric) and the ring-model wire bytes are
+reported; the roofline collective term uses the ring model (documented in
+EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2fnuz": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one typed shape, e.g. bf16[4096,14336] (layout braces optional)
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*[a-z0-9]*)\[([0-9,]*)\]")
+# op definition: "%name = <result> <op>(" where <op> is a collective
+_OP_RE = re.compile(
+    r"=\s+(?P<result>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<suffix>-start|-done)?\s*\(")
+# replica_groups=[4,2]<=[8]  (4 groups of 2)  |  replica_groups={{0,1},{2,3}}
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+# collective-permute has source_target_pairs instead of replica_groups
+_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(text: str) -> float:
+    """Sum byte sizes of all typed shapes appearing in `text`."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue  # token[] etc.
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(1, m.group(1).count(",") + 1)
+    return 2  # collective-permute / unknown: treat as point-to-point
+
+
+@dataclass
+class CollectiveOp:
+    kind: str                  # base op name (suffix stripped)
+    result_bytes: float        # per-chip result buffer size
+    operand_bytes: float       # per-chip operand size (derived)
+    wire_bytes: float          # ring-model per-chip wire traffic
+    group_size: int
+    dtype: str = ""
+    line: str = ""
+
+    @property
+    def wire_bytes_bf16eq(self) -> float:
+        """XLA-CPU upcasts every bf16 dot to f32 BEFORE SPMD partitioning
+        (measured in the pre-build probe: the partial-sum all-reduce is
+        f32 even with preferred_element_type=bf16), so large f32 collectives
+        in a bf16 model carry 2x the bytes a TPU lowering would move. This
+        column halves f32 ops >= 1 MiB — the TPU-equivalent wire traffic."""
+        if self.dtype == "f32" and self.wire_bytes >= 2**20:
+            return self.wire_bytes / 2
+        return self.wire_bytes
+
+
+@dataclass
+class CollectiveSummary:
+    ops: List[CollectiveOp] = field(default_factory=list)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(o.wire_bytes for o in self.ops)
+
+    @property
+    def total_wire_bytes_bf16eq(self) -> float:
+        return sum(o.wire_bytes_bf16eq for o in self.ops)
+
+    @property
+    def total_operand_bytes(self) -> float:
+        return sum(o.operand_bytes for o in self.ops)
+
+    def by_kind(self) -> Dict[str, Tuple[int, float]]:
+        out: Dict[str, Tuple[int, float]] = {}
+        for o in self.ops:
+            n, b = out.get(o.kind, (0, 0.0))
+            out[o.kind] = (n + 1, b + o.wire_bytes)
+        return out
+
+    def __str__(self) -> str:
+        rows = [f"  {k:20s} n={n:4d}  wire={b/1e9:10.3f} GB"
+                for k, (n, b) in sorted(self.by_kind().items())]
+        rows.append(f"  {'TOTAL':20s} n={len(self.ops):4d}  "
+                    f"wire={self.total_wire_bytes/1e9:10.3f} GB")
+        return "\n".join(rows)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveSummary:
+    summary = CollectiveSummary()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if m.group("suffix") == "-done":
+            continue  # -start already counted
+        kind = m.group("op")
+        result = m.group("result")
+        rb = _shape_bytes(result)
+        if kind == "all-gather" and m.group("suffix") == "-start":
+            # start result tuple carries (operand, result); result is larger
+            rb = rb / 2 if rb else rb
+        g = _group_size(line)
+        if kind == "all-gather":
+            operand = rb / max(g, 1)
+            wire = operand * (g - 1)
+        elif kind == "reduce-scatter":
+            operand = rb * g
+            wire = rb * (g - 1)
+        elif kind == "all-reduce":
+            operand = rb
+            wire = 2.0 * rb * (g - 1) / max(g, 1)
+        elif kind == "all-to-all":
+            operand = rb
+            wire = rb * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            operand = rb
+            wire = rb
+        dts = {dt for dt, _ in _SHAPE_RE.findall(m.group("result"))
+               if dt in _DTYPE_BYTES}
+        dtype = dts.pop() if len(dts) == 1 else ",".join(sorted(dts))
+        summary.ops.append(CollectiveOp(kind, rb, operand, wire, g, dtype,
+                                        line.strip()[:160]))
+    return summary
+
+
+def collective_bytes(hlo_text: str) -> float:
+    """Per-chip ring-model wire bytes for the whole module."""
+    return parse_collectives(hlo_text).total_wire_bytes
+
+
+def count_ops(hlo_text: str, name: str) -> int:
+    """Count op definitions of a given HLO opcode (e.g. 'fusion', 'dot',
+    'while') — used by perf iterations to spot remat recompute and layout
+    churn."""
+    pat = re.compile(rf"=\s+(?:\([^)]*\)|\S+)\s+{re.escape(name)}[.\s(]")
+    return sum(1 for line in hlo_text.splitlines() if pat.search(line))

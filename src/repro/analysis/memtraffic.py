@@ -1,0 +1,121 @@
+"""Analytic per-chip HBM traffic model (the roofline memory term).
+
+XLA-CPU's ``cost_analysis()['bytes accessed']`` counts per-instruction operand
+bytes on the *CPU*-optimized module, which barely fuses — measured 5-6x above
+theory for a plain matmul (EXPERIMENTS.md §Roofline methodology). It is kept
+in the dry-run JSON as an upper bound, but the roofline t_mem uses this
+analytic model of what a TPU actually moves through HBM:
+
+train (per step, per chip):
+    weights   : read fwd + read remat + read bwd             3 x P
+    grads     : write + read (optimizer)                     2 x P
+    optimizer : m,v read+write, p read+write                 4 x M + 2 x P
+    activs    : residual-granularity saves r/w (remat=full saves layer inputs
+                only; intermediates are recomputed, traffic ~ VMEM-resident)
+    attention : flash kernel re-reads KV once per q-block
+decode (per token, per chip):
+    weights read once + KV cache read + one-slot write
+prefill:
+    weights read + fwd activations + cache write + flash KV re-reads
+
+Every coefficient is spelled out below; the model intentionally errs on the
+optimistic (fused-TPU) side, making t_mem a *lower* bound — i.e. a cell
+reported memory-bound truly is.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+from repro.config.base import ModelConfig
+from repro.config.shapes import ShapeConfig
+
+PyTree = Any
+
+
+def _dtype_bytes(dt) -> float:
+    return np.dtype(dt).itemsize
+
+
+def sharded_bytes(specs: PyTree, axes: PyTree, ctx) -> float:
+    """Per-chip bytes of a spec tree under the resolver's placements."""
+    import jax
+
+    from repro.sharding.rules import resolve_pspec
+
+    total = 0.0
+
+    def one(leaf, ax):
+        nonlocal total
+        spec = resolve_pspec(leaf.shape, ax, ctx)
+        denom = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            for n in names:
+                denom *= ctx.axis_size(n)
+        total += int(np.prod(leaf.shape)) * _dtype_bytes(leaf.dtype) / denom
+
+    jax.tree.map(one, specs, axes, is_leaf=lambda x: hasattr(x, "shape"))
+    return total
+
+
+def _ff_active(cfg: ModelConfig) -> float:
+    if cfg.family == "moe":
+        return cfg.moe.top_k * cfg.moe.d_ff_expert * cfg.moe.capacity_factor
+    if cfg.family == "ssm":
+        return 2.0 * cfg.ssm.d_inner(cfg.d_model)
+    return float(cfg.d_ff)
+
+
+def activation_traffic_per_layer(cfg: ModelConfig, tokens_global: int,
+                                 chips: int, passes: float) -> float:
+    """Per-chip bytes for one layer's activation stream.
+
+    Residual-granularity tensors (written fwd, read bwd): the block input,
+    attention output, MLP input, MLP output (4 x d); the MLP hidden and
+    attention q/k/v stay VMEM-resident in the fused TPU kernels (their HBM
+    traffic is the remat *recompute*, already counted as weight re-reads).
+    """
+    t_chip = tokens_global / chips
+    d = cfg.d_model
+    bytes_bf16 = 2.0
+    resident = 4.0 * d + 0.5 * _ff_active(cfg)   # spilled fraction of hidden
+    return t_chip * resident * bytes_bf16 * passes
+
+
+def flash_kv_traffic(cfg: ModelConfig, shape: ShapeConfig, chips: int,
+                     chunk: int = 1024) -> float:
+    """Flash attention re-reads K,V once per query block (causal ~ 1/2)."""
+    if cfg.family == "ssm":
+        return 0.0
+    s = shape.seq_len
+    window = cfg.sliding_window or s
+    kv_len = min(s, window)
+    n_q_blocks = max(1, s // chunk)
+    kv_bytes = (shape.global_batch * kv_len * cfg.num_kv_heads
+                * cfg.resolved_head_dim * 2 * 2.0)
+    return 0.5 * n_q_blocks * kv_bytes / chips
+
+
+def hbm_traffic(cfg: ModelConfig, shape: ShapeConfig, chips: int,
+                param_bytes_chip: float, moment_bytes_chip: float = 0.0,
+                cache_bytes_chip: float = 0.0, remat: bool = True) -> float:
+    """Per-chip HBM bytes for one step of this cell."""
+    L = cfg.num_layers
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        weight_reads = (3.0 if remat else 2.0) * param_bytes_chip
+        grad_traffic = 2.0 * param_bytes_chip
+        opt_traffic = 4.0 * moment_bytes_chip + 2.0 * param_bytes_chip
+        act = L * activation_traffic_per_layer(cfg, tokens, chips, passes=2.0)
+        kv = L * flash_kv_traffic(cfg, shape, chips) * 3.0  # fwd+remat+bwd
+        return weight_reads + grad_traffic + opt_traffic + act + kv
+    if shape.kind == "prefill":
+        act = L * activation_traffic_per_layer(cfg, tokens, chips, passes=1.0)
+        kv = L * flash_kv_traffic(cfg, shape, chips)
+        return param_bytes_chip + act + kv + cache_bytes_chip  # cache write
+    # decode: params + full cache read + one-slot write (~0)
+    return param_bytes_chip + cache_bytes_chip

@@ -1,0 +1,15 @@
+from repro.checkpoint.checkpointer import (
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.checkpoint.elastic import reshard
+
+__all__ = [
+    "AsyncCheckpointer",
+    "latest_step",
+    "restore_checkpoint",
+    "save_checkpoint",
+    "reshard",
+]

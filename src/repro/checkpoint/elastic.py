@@ -1,0 +1,37 @@
+"""Elastic re-meshing: restore a checkpoint onto a different mesh.
+
+Because checkpoints store logically-global arrays and shardings are derived
+from logical axes (sharding.rules), changing the mesh (e.g. 2x16x16 ->
+1x8x16 after losing a pod) only changes where `resolve_pspec` places each
+dim — the restore path re-places every leaf under the new context. Data-order
+determinism is preserved by the stateless pipeline (step index alone).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.sharding.rules import ShardingContext, resolve_pspec
+
+PyTree = Any
+
+
+def shardings_for(tree_specs: PyTree, axes: PyTree, mesh: Mesh,
+                  ctx: Optional[ShardingContext] = None) -> PyTree:
+    """NamedSharding tree from (ShapeDtypeStruct|array tree, logical-axes tree)."""
+    ctx = ctx or ShardingContext(mesh)
+
+    def one(leaf, ax):
+        return NamedSharding(mesh, resolve_pspec(leaf.shape, ax, ctx))
+
+    return jax.tree.map(one, tree_specs, axes,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def reshard(tree: PyTree, axes: PyTree, mesh: Mesh,
+            ctx: Optional[ShardingContext] = None) -> PyTree:
+    """Re-place an in-memory tree under a (new) mesh."""
+    sh = shardings_for(tree, axes, mesh, ctx)
+    return jax.tree.map(lambda a, s: jax.device_put(a, s), tree, sh)

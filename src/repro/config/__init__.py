@@ -1,0 +1,29 @@
+from repro.config.base import (
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    HybridConfig,
+    EncDecConfig,
+    ParallelConfig,
+    TrainConfig,
+    RunConfig,
+)
+from repro.config.shapes import ShapeConfig, SHAPES, shape_by_name
+from repro.config.registry import ARCHS, get_arch, list_archs
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "HybridConfig",
+    "EncDecConfig",
+    "ParallelConfig",
+    "TrainConfig",
+    "RunConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "shape_by_name",
+    "ARCHS",
+    "get_arch",
+    "list_archs",
+]

@@ -1,0 +1,4 @@
+"""One module per assigned architecture (exact public-literature configs).
+
+Selectable via ``--arch <id>`` through :mod:`repro.config.registry`.
+"""

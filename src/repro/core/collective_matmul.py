@@ -1,0 +1,128 @@
+"""Collective matmuls: the HDOT subdomain idea applied to tensor parallelism.
+
+A Megatron/SP layer computes  y = all_gather(x) @ W  and  z = reduce_scatter(h @ V).
+The "two-phase" schedule performs the whole collective, then the whole matmul —
+exactly the paper's serial comm/compute phases. The HDOT schedule
+over-decomposes the matmul into per-shard chunks (the same partitioning the
+mesh already applies!) and rides a ppermute ring: at step k the chunk matmul
+runs while the next chunk is in flight. This is the TPU-native analogue of the
+paper's "communication tasks" (TAMPI) and was shown for TPUs in
+"Overlap communication with dependent computation via decomposition"
+[Wang et al., ASPLOS'23]; we implement it with explicit lax.ppermute inside
+shard_map so the overlap is structural, not a compiler heuristic.
+
+Conventions (all inside shard_map, mesh axis `axis_name`, P = axis size):
+  ag_matmul:  x_local (S/P, M), w_local (M, N/P)  ->  y_local (S, N/P)
+  matmul_rs:  h_local (S, N/P), v_local (N/P, M)  ->  z_local (S/P, M)  (= psum_scatter over seq)
+Numerics are bit-identical to the two-phase reference modulo fp reassociation
+of the reduce order (asserted to ~1e-6 rel in tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _ring_perms(n: int):
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    bwd = [(i, (i - 1) % n) for i in range(n)]
+    return fwd, bwd
+
+
+# ------------------------------------------------------------------ two-phase
+def ag_matmul_two_phase(x: jax.Array, w: jax.Array, axis_name: str) -> jax.Array:
+    xg = lax.all_gather(x, axis_name, axis=0, tiled=True)   # (S, M)
+    return xg @ w
+
+
+def matmul_rs_two_phase(h: jax.Array, v: jax.Array, axis_name: str) -> jax.Array:
+    z = h @ v                                                # (S, M) partial
+    return lax.psum_scatter(z, axis_name, scatter_dimension=0, tiled=True)
+
+
+# ----------------------------------------------------------------------- HDOT
+def ag_matmul_hdot(x: jax.Array, w: jax.Array, axis_name: str,
+                   bidirectional: bool = True) -> jax.Array:
+    """All-gather matmul as a ppermute ring of chunk "tasks".
+
+    Step k computes the row-block owned by rank (idx - k) [resp (idx + k) on
+    the reverse ring] while the next chunk travels. The python loop is
+    unrolled: every chunk matmul is independent of the other chunks' permutes,
+    so the async scheduler overlaps them (HDOT dataflow, not fork-join)."""
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return x @ w
+    idx = lax.axis_index(axis_name)
+    s_loc = x.shape[0]
+    out = jnp.zeros((n * s_loc, w.shape[1]), dtype=jnp.promote_types(x.dtype, w.dtype))
+    fwd, bwd = _ring_perms(n)
+
+    if not bidirectional:
+        cur = x
+        for k in range(n):
+            src = (idx - k) % n                      # owner of the chunk we hold
+            out = lax.dynamic_update_slice_in_dim(out, (cur @ w).astype(out.dtype),
+                                                  src * s_loc, axis=0)
+            if k != n - 1:
+                cur = lax.ppermute(cur, axis_name, fwd)
+        return out
+
+    # Bidirectional ring: split the local chunk in two, circulate halves in
+    # opposite directions — halves the ring latency (beyond-paper optimization;
+    # same trick as bidirectional collective matmul on TPU ICI).
+    half = s_loc // 2
+    if half == 0:
+        return ag_matmul_hdot(x, w, axis_name, bidirectional=False)
+    lo, hi = x[:half], x[half:]
+    steps_fwd = (n + 1) // 2 if n % 2 else n // 2
+    cur_lo, cur_hi = lo, hi
+    for k in range(n):
+        src_lo = (idx - k) % n
+        src_hi = (idx + k) % n
+        out = lax.dynamic_update_slice_in_dim(out, (cur_lo @ w).astype(out.dtype),
+                                              src_lo * s_loc, axis=0)
+        out = lax.dynamic_update_slice_in_dim(out, (cur_hi @ w).astype(out.dtype),
+                                              src_hi * s_loc + half, axis=0)
+        if k != n - 1:
+            cur_lo = lax.ppermute(cur_lo, axis_name, fwd)
+            cur_hi = lax.ppermute(cur_hi, axis_name, bwd)
+    del steps_fwd
+    return out
+
+
+def matmul_rs_hdot(h: jax.Array, v: jax.Array, axis_name: str) -> jax.Array:
+    """Reduce-scatter matmul ring: at step k, rank i adds its contribution for
+    row-block (i - k - 1) mod n to the travelling accumulator. The chunk
+    matmul at step k overlaps the permute of the accumulator from step k-1."""
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return h @ v
+    idx = lax.axis_index(axis_name)
+    s = h.shape[0]
+    assert s % n == 0, (s, n)
+    s_loc = s // n
+    fwd, _ = _ring_perms(n)
+
+    acc = None
+    for k in range(n):
+        b = (idx - k - 1) % n
+        h_b = lax.dynamic_slice_in_dim(h, b * s_loc, s_loc, axis=0)
+        part = h_b @ v
+        acc = part if acc is None else lax.ppermute(acc, axis_name, fwd) + part
+    # after n steps rank i holds the full sum for block (i - n) mod n == i...
+    # one more hop aligns block (i-? ) — verify: at k=n-1, b=(i-n)%n = i. OK.
+    return acc
+
+
+# ---------------------------------------------------------------- dispatchers
+def ag_matmul(x: jax.Array, w: jax.Array, axis_name: str, mode: str = "hdot") -> jax.Array:
+    if mode == "hdot":
+        return ag_matmul_hdot(x, w, axis_name)
+    return ag_matmul_two_phase(x, w, axis_name)
+
+
+def matmul_rs(h: jax.Array, v: jax.Array, axis_name: str, mode: str = "hdot") -> jax.Array:
+    if mode == "hdot":
+        return matmul_rs_hdot(h, v, axis_name)
+    return matmul_rs_two_phase(h, v, axis_name)

@@ -1,0 +1,224 @@
+"""Hierarchical domain over-decomposition (paper §3.1-3.2).
+
+The paper's central idea: *reuse the process-level partitioning scheme at task
+level*. ``decompose_grid`` is that single scheme; ``Domain`` applies it at
+process level (mesh shards) and ``Domain.over_decompose`` applies the SAME
+function again at task level, producing :class:`SubDomain` lists with
+``is_boundary`` checks (paper Code 4) and halo accounting (paper Table 1).
+
+Pure python/numpy — usable before jax initializes, and by the data pipeline,
+the stencil apps and the benchmarks alike.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class Box:
+    """Half-open index box: per-dim [start, stop)."""
+
+    start: Tuple[int, ...]
+    stop: Tuple[int, ...]
+
+    def __post_init__(self):
+        assert len(self.start) == len(self.stop)
+        assert all(a <= b for a, b in zip(self.start, self.stop)), (self.start, self.stop)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.start)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(b - a for a, b in zip(self.start, self.stop))
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+    def slices(self) -> Tuple[slice, ...]:
+        return tuple(slice(a, b) for a, b in zip(self.start, self.stop))
+
+    def contains(self, other: "Box") -> bool:
+        return all(
+            sa <= oa and ob <= sb
+            for sa, oa, ob, sb in zip(self.start, other.start, other.stop, self.stop)
+        )
+
+    def shifted(self, offset: Sequence[int]) -> "Box":
+        return Box(
+            tuple(a + o for a, o in zip(self.start, offset)),
+            tuple(b + o for b, o in zip(self.stop, offset)),
+        )
+
+
+def _split_extent(extent: int, parts: int) -> List[Tuple[int, int]]:
+    """Split [0, extent) into `parts` contiguous ranges, remainder spread over
+    the leading parts (the classic MPI block distribution)."""
+    assert parts >= 1
+    base, rem = divmod(extent, parts)
+    out = []
+    cur = 0
+    for p in range(parts):
+        n = base + (1 if p < rem else 0)
+        out.append((cur, cur + n))
+        cur += n
+    assert cur == extent
+    return out
+
+
+def decompose_grid(shape: Sequence[int], parts: Sequence[int]) -> List[Box]:
+    """THE partition scheme (used identically at process- and task-level).
+
+    Splits an N-d index space of `shape` into a grid of `parts[i]` blocks per
+    dimension, row-major order. Every cell belongs to exactly one box.
+    """
+    assert len(shape) == len(parts)
+    per_dim = [_split_extent(e, p) for e, p in zip(shape, parts)]
+
+    boxes: List[Box] = []
+
+    def rec(d: int, start: List[int], stop: List[int]):
+        if d == len(shape):
+            boxes.append(Box(tuple(start), tuple(stop)))
+            return
+        for a, b in per_dim[d]:
+            rec(d + 1, start + [a], stop + [b])
+
+    rec(0, [], [])
+    return boxes
+
+
+def halo_cells(box: Box, global_shape: Sequence[int], width: int,
+               dims: Optional[Sequence[int]] = None, periodic: bool = False) -> int:
+    """Number of halo cells this box must allocate (paper Table 1 accounting):
+    one `width`-deep slab per face that has a neighbor."""
+    dims = range(box.ndim) if dims is None else dims
+    total = 0
+    for d in dims:
+        face = box.size // max(box.shape[d], 1)
+        lo_neighbor = periodic or box.start[d] > 0
+        hi_neighbor = periodic or box.stop[d] < global_shape[d]
+        total += width * face * (int(lo_neighbor) + int(hi_neighbor))
+    return total
+
+
+@dataclass(frozen=True)
+class SubDomain:
+    """A task-level data partition (paper §3.2). Carries its geometric position
+    so `is_boundary` can gate communication tasks (paper Code 4's isBoundary)."""
+
+    box: Box                      # in GLOBAL coordinates
+    local_box: Box                # in the owning domain's LOCAL coordinates
+    domain_box: Box               # the owning process-level domain
+    global_shape: Tuple[int, ...]
+    index: Tuple[int, ...]        # position in the subdomain grid
+    grid: Tuple[int, ...]         # subdomain grid shape
+
+    def is_boundary(self, dim: Optional[int] = None, side: Optional[str] = None) -> bool:
+        """True if this subdomain touches the owning *domain's* edge (and thus
+        owns an MPI-level communication task in the paper's scheme)."""
+        dims = range(self.box.ndim) if dim is None else [dim]
+        for d in dims:
+            lo = self.box.start[d] == self.domain_box.start[d]
+            hi = self.box.stop[d] == self.domain_box.stop[d]
+            if side == "lo" and lo:
+                return True
+            if side == "hi" and hi:
+                return True
+            if side is None and (lo or hi):
+                return True
+        return False
+
+    def is_global_boundary(self, dim: Optional[int] = None) -> bool:
+        dims = range(self.box.ndim) if dim is None else [dim]
+        for d in dims:
+            if self.box.start[d] == 0 or self.box.stop[d] == self.global_shape[d]:
+                return True
+        return False
+
+
+@dataclass(frozen=True)
+class Domain:
+    """A process-level data partition (one mesh shard's slice of the global
+    problem), created by applying `decompose_grid` at process level."""
+
+    global_shape: Tuple[int, ...]
+    box: Box                      # this rank's slice, global coordinates
+    rank_index: Tuple[int, ...]   # position in the process grid
+    process_grid: Tuple[int, ...]
+
+    # ------------------------------------------------------------- factories
+    @staticmethod
+    def for_rank(global_shape: Sequence[int], process_grid: Sequence[int],
+                 rank: int) -> "Domain":
+        boxes = decompose_grid(global_shape, process_grid)
+        assert 0 <= rank < len(boxes)
+        idx = _unravel(rank, process_grid)
+        return Domain(tuple(global_shape), boxes[rank], idx, tuple(process_grid))
+
+    @staticmethod
+    def all_ranks(global_shape: Sequence[int], process_grid: Sequence[int]) -> List["Domain"]:
+        n = int(math.prod(process_grid))
+        return [Domain.for_rank(global_shape, process_grid, r) for r in range(n)]
+
+    # ------------------------------------------------- hierarchical reuse (§3.2)
+    def over_decompose(self, sub_grid: Sequence[int]) -> List[SubDomain]:
+        """Apply the SAME decomposition scheme one level down: the domain's
+        local box is split by `decompose_grid` into task-level subdomains."""
+        local_boxes = decompose_grid(self.box.shape, sub_grid)
+        subs: List[SubDomain] = []
+        for i, lb in enumerate(local_boxes):
+            gb = lb.shifted(self.box.start)
+            subs.append(
+                SubDomain(
+                    box=gb,
+                    local_box=lb,
+                    domain_box=self.box,
+                    global_shape=self.global_shape,
+                    index=_unravel(i, sub_grid),
+                    grid=tuple(sub_grid),
+                )
+            )
+        return subs
+
+    def neighbors(self, periodic: bool = False) -> Dict[Tuple[int, str], Tuple[int, ...]]:
+        """rank_index of the neighbor across each face, keyed by (dim, 'lo'|'hi')."""
+        out: Dict[Tuple[int, str], Tuple[int, ...]] = {}
+        for d in range(len(self.process_grid)):
+            for side, delta in (("lo", -1), ("hi", +1)):
+                idx = list(self.rank_index)
+                idx[d] += delta
+                if periodic:
+                    idx[d] %= self.process_grid[d]
+                elif not (0 <= idx[d] < self.process_grid[d]):
+                    continue
+                out[(d, side)] = tuple(idx)
+        return out
+
+    def halo_cells(self, width: int, dims: Optional[Sequence[int]] = None,
+                   periodic: bool = False) -> int:
+        return halo_cells(self.box, self.global_shape, width, dims, periodic)
+
+
+def _unravel(i: int, grid: Sequence[int]) -> Tuple[int, ...]:
+    out = []
+    for g in reversed(list(grid)):
+        out.append(i % g)
+        i //= g
+    return tuple(reversed(out))
+
+
+# ----------------------------------------------------------- Table 1 analytics
+def halo_fraction(global_shape: Sequence[int], process_grid: Sequence[int],
+                  width: int = 1) -> Tuple[int, int, float]:
+    """Reproduces paper Table 1: total local data, total halo cells, and the
+    paper's "% of data in halo" (= halo / data), summed over all ranks."""
+    domains = Domain.all_ranks(global_shape, process_grid)
+    data = sum(d.box.size for d in domains)
+    halo = sum(d.halo_cells(width) for d in domains)
+    return data, halo, halo / data

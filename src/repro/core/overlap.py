@@ -1,0 +1,115 @@
+"""Two-phase vs HDOT communication schedules for training (paper §3.1-3.2).
+
+Gradient synchronization is the LM-training analogue of the paper's halo
+exchange: the "two-phase" hybrid code computes the whole backward pass, then
+performs one monolithic gradient reduction (serial comm phase, Amdahl-capped
+— paper Figure 1). The HDOT schedule over-decomposes the gradient set into
+layer-aligned buckets (subdomains of the parameter domain!) whose reductions
+are independent collectives the XLA scheduler overlaps with remaining
+backward compute.
+
+Also provides microbatch gradient accumulation (the sequence-of-subdomains
+view of the global batch) used by the trainer and by the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+PyTree = Any
+AxisNames = Union[str, Sequence[str]]
+
+
+# ------------------------------------------------------------------ bucketing
+def make_buckets(tree: PyTree, num_buckets: int) -> List[List[Tuple[int, Any]]]:
+    """Greedy size-balanced grouping of tree leaves into `num_buckets` buckets.
+    Leaf ORDER is preserved inside a bucket; buckets are the HDOT subdomains of
+    the gradient domain. Returns [[(leaf_idx, leaf), ...], ...]."""
+    leaves = jax.tree.leaves(tree)
+    sizes = [(i, int(getattr(l, "size", 1))) for i, l in enumerate(leaves)]
+    num_buckets = max(1, min(num_buckets, len(leaves)))
+    # greedy: biggest leaf into currently-smallest bucket
+    buckets: List[List[int]] = [[] for _ in range(num_buckets)]
+    load = [0] * num_buckets
+    for i, sz in sorted(sizes, key=lambda t: -t[1]):
+        b = load.index(min(load))
+        buckets[b].append(i)
+        load[b] += sz
+    return [[(i, leaves[i]) for i in sorted(b)] for b in buckets if b]
+
+
+def grad_sync_two_phase(grads: PyTree, axes: AxisNames) -> PyTree:
+    """Paper baseline: ONE monolithic reduction of the flattened gradient.
+    Maximally serialized — nothing can overlap a single fused collective."""
+    leaves, treedef = jax.tree.flatten(grads)
+    flat = jnp.concatenate([l.reshape(-1) for l in leaves]) if leaves else jnp.zeros((0,))
+    flat = lax.psum(flat, axes)
+    out, off = [], 0
+    for l in leaves:
+        out.append(flat[off:off + l.size].reshape(l.shape).astype(l.dtype))
+        off += l.size
+    return jax.tree.unflatten(treedef, out)
+
+
+def grad_sync_hdot(grads: PyTree, axes: AxisNames, num_buckets: int = 8) -> PyTree:
+    """HDOT: per-bucket reductions — independent collectives that the
+    latency-hiding scheduler interleaves with compute (and with each other)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    buckets = make_buckets(grads, num_buckets)
+    synced: dict = {}
+    for bucket in buckets:
+        idxs = [i for i, _ in bucket]
+        vals = [l for _, l in bucket]
+        flat = jnp.concatenate([v.reshape(-1) for v in vals])
+        flat = lax.psum(flat, axes)
+        off = 0
+        for i, v in zip(idxs, vals):
+            synced[i] = flat[off:off + v.size].reshape(v.shape).astype(v.dtype)
+            off += v.size
+    return jax.tree.unflatten(treedef, [synced[i] for i in range(len(leaves))])
+
+
+def grad_sync(grads: PyTree, axes: AxisNames, mode: str = "hdot",
+              num_buckets: int = 8) -> PyTree:
+    if mode == "hdot":
+        return grad_sync_hdot(grads, axes, num_buckets)
+    if mode in ("none", "two_phase"):
+        return grad_sync_two_phase(grads, axes)
+    raise ValueError(f"unknown overlap mode {mode!r}")
+
+
+# --------------------------------------------------------- microbatch accum
+def microbatch_split(batch: PyTree, steps: int) -> PyTree:
+    """(B, ...) -> (steps, B/steps, ...) for scan-based accumulation."""
+    def split(x):
+        b = x.shape[0]
+        assert b % steps == 0, f"batch {b} not divisible by accum steps {steps}"
+        return x.reshape(steps, b // steps, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def accumulate_grads(loss_and_grad: Callable[[PyTree, PyTree], Tuple[jax.Array, PyTree]],
+                     params: PyTree, batch: PyTree, steps: int) -> Tuple[jax.Array, PyTree]:
+    """Gradient accumulation over `steps` microbatches via lax.scan.
+
+    Each microbatch is a task-level subdomain of the global batch (the HDOT
+    over-decomposition along the batch axis); partial gradients are the
+    task-level reduction partials, accumulated in fp32."""
+    if steps == 1:
+        return loss_and_grad(params, batch)
+
+    micro = microbatch_split(batch, steps)
+
+    def body(carry, mb):
+        loss_acc, g_acc = carry
+        loss, g = loss_and_grad(params, mb)
+        g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+        return (loss_acc + loss.astype(jnp.float32), g_acc), None
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss_sum, g_sum), _ = lax.scan(body, (jnp.zeros((), jnp.float32), g0), micro)
+    inv = 1.0 / steps
+    return loss_sum * inv, jax.tree.map(lambda g: g * inv, g_sum)

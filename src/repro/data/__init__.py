@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMDataset
+
+__all__ = ["SyntheticLMDataset"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+Each kernel package provides:
+  <name>.py -- pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+  ops.py    -- jit'd wrapper with impl dispatch ('ref' | 'pallas' | interpret)
+  ref.py    -- pure-jnp oracle (also the CPU execution path for models/tests)
+
+Kernels: flash_attention (GQA/causal/SWA), heat2d (paper's blocked
+Gauss-Seidel tile, red-black ordered for the VPU), ssd_scan (Mamba-2 SSD
+chunk), lru_scan (RG-LRU gated linear recurrence).
+"""

@@ -1,0 +1,10 @@
+"""Flash attention kernel package.
+
+The kernel submodule is imported eagerly BEFORE the function re-export so the
+package attribute `flash_attention` deterministically refers to the function
+(submodule import would otherwise overwrite it on first lazy use).
+"""
+from repro.kernels.flash_attention import flash_attention as _kernel_module  # noqa: F401
+from repro.kernels.flash_attention.ops import flash_attention
+
+__all__ = ["flash_attention"]

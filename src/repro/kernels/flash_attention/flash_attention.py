@@ -1,0 +1,114 @@
+"""Pallas TPU flash attention (fwd): blocked online-softmax, causal + sliding
+window, GQA by index-mapped KV heads.
+
+TPU adaptation of FlashAttention [arXiv:2205.14135]: the (block_q, block_k)
+score tile lives in VMEM and feeds the MXU; the running (m, l, acc) statistics
+are VMEM scratch persisting across the sequential kv-block grid dimension
+(TPU grids iterate sequentially, which *is* the flash inner loop — no atomics
+or shared-memory tricks needed, cf. DESIGN.md hardware-adaptation notes).
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks), kv innermost.
+VMEM per step ~ block_q*d + 2*block_k*d + block_q*block_k floats; defaults
+(block 512, d 128) ~ 1.4 MB << 16 MB VMEM, MXU-aligned (multiples of 128).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: Optional[int],
+            block_q: int, block_k: int, num_kv_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale   # (bq, bk)
+
+    q_pos = iq * block_q + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_scr[...]                                    # (bq, 1)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _done():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True, window: Optional[int] = None,
+                           block_q: int = 512, block_k: int = 512,
+                           interpret: bool = False) -> jax.Array:
+    """q: (b, sq, hq, d); k, v: (b, sk, hkv, d) — contiguous positions."""
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, block_q, sk, block_k)
+    nq, nk = sq // block_q, sk // block_k
+
+    # (b, h, s, d) layout for clean BlockSpecs
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+
+    kernel = functools.partial(
+        _kernel, scale=1.0 / math.sqrt(d), causal=causal, window=window,
+        block_q=block_q, block_k=block_k, num_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda ib, ih, iq, ik: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda ib, ih, iq, ik: (ib, ih // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,27 @@
+"""jit'd wrapper for flash attention with impl dispatch."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention import ref as _ref
+
+
+def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
+                    impl: str = "auto", block_q: int = 512, block_k: int = 512,
+                    interpret: Optional[bool] = None, **_ignored) -> jax.Array:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal, window)
+    if impl == "pallas":
+        import importlib
+
+        _k = importlib.import_module("repro.kernels.flash_attention.flash_attention")
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return _k.flash_attention_pallas(q, k, v, causal, window,
+                                         block_q=block_q, block_k=block_k,
+                                         interpret=interpret)
+    raise ValueError(f"unknown impl {impl!r}")

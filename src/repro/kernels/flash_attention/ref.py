@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for blocked causal/SWA GQA attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True,
+                        window: int | None = None) -> jax.Array:
+    """q: (b, sq, hq, d); k, v: (b, sk, hkv, d); positions are arange.
+    Returns (b, sq, hq, d)."""
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    s = jnp.einsum("bshgd,bthd->bhgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    m = jnp.ones((sq, sk), bool)
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        m &= kp > qp - window
+    s = jnp.where(m, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgst,bthd->bshgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, d).astype(q.dtype)

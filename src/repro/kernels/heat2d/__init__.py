@@ -1,0 +1,3 @@
+from repro.kernels.heat2d.ops import heat2d_sweep
+
+__all__ = ["heat2d_sweep"]

@@ -1,0 +1,9 @@
+"""RG-LRU linear-recurrence scan kernel package.
+
+The kernel submodule is imported eagerly BEFORE the function re-export so the
+package attribute `lru_scan` deterministically refers to the function.
+"""
+from repro.kernels.lru_scan import lru_scan as _kernel_module  # noqa: F401
+from repro.kernels.lru_scan.ops import lru_scan
+
+__all__ = ["lru_scan"]

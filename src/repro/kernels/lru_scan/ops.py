@@ -1,0 +1,24 @@
+"""jit'd wrapper for the gated linear recurrence (RG-LRU) scan."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.kernels.lru_scan import ref as _ref
+
+
+def lru_scan(a, b, h0=None, impl: str = "auto",
+             interpret: bool | None = None) -> Tuple[jax.Array, jax.Array]:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return _ref.lru_scan_ref(a, b, h0)
+    if impl == "pallas":
+        import importlib
+
+        _k = importlib.import_module("repro.kernels.lru_scan.lru_scan")
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return _k.lru_scan_pallas(a, b, h0, interpret=interpret)
+    raise ValueError(f"unknown impl {impl!r}")

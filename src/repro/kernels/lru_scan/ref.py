@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the gated linear recurrence  h_t = a_t*h_{t-1} + b_t
+(RG-LRU inner loop, Griffin [arXiv:2402.19427]).
+
+Uses the associative composition (a2,b2)o(a1,b1) = (a1*a2, a2*b1 + b2) so the
+oracle itself is parallel (log-depth), matching what the Pallas kernel
+computes blockwise.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def lru_scan_ref(a: jax.Array, b: jax.Array,
+                 h0: jax.Array | None = None) -> Tuple[jax.Array, jax.Array]:
+    """a, b: (batch, seq, width). Returns (h (batch, seq, width), h_last)."""
+    if h0 is not None:
+        # fold the initial state into the first step: h_1 = a_1*h0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    af, bf = jax.lax.associative_scan(combine, (a.astype(jnp.float32),
+                                                b.astype(jnp.float32)), axis=1)
+    h = bf
+    return h.astype(b.dtype), h[:, -1]
+
+
+def lru_scan_sequential(a, b, h0=None):
+    """O(l) loop ground truth (tests only)."""
+    bsz, l, w = a.shape
+    h = jnp.zeros((bsz, w), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    out = []
+    for t in range(l):
+        h = a[:, t].astype(jnp.float32) * h + b[:, t].astype(jnp.float32)
+        out.append(h)
+    return jnp.stack(out, 1).astype(b.dtype), h

@@ -1,0 +1,50 @@
+"""jit'd wrapper for the SSD scan with implementation dispatch.
+
+impl:
+  'ref'      pure-jnp chunked oracle (CPU default; also the GSPMD/dry-run path)
+  'pallas'   TPU Pallas kernel for the within-chunk terms (interpret=True on CPU)
+  'auto'     pallas on TPU backends, ref elsewhere
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.kernels.ssd_scan import ref as _ref
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def ssd(x, dt, A, B, C, chunk: int, initial_state=None, impl: str = "auto",
+        unroll_chunks: bool = False, interpret: bool | None = None
+        ) -> Tuple[jax.Array, jax.Array]:
+    if impl == "auto":
+        impl = "pallas" if _backend() == "tpu" else "ref"
+    # pad ragged tails to a chunk multiple with dt=0 steps: decay exp(0*A)=1
+    # and input dt*Bx=0, so the final state is exact and y[:, l:] is sliced off
+    l = x.shape[1]
+    pad = (-l) % chunk
+    if pad:
+        import jax.numpy as jnp
+
+        padded = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        y, state = ssd(padded(x), padded(dt), A, padded(B), padded(C), chunk,
+                       initial_state, impl, unroll_chunks, interpret)
+        return y[:, :l], state
+    if impl == "ref":
+        return _ref.ssd_ref(x, dt, A, B, C, chunk, initial_state, unroll_chunks)
+    if impl == "pallas":
+        from repro.kernels.ssd_scan import ssd_scan as _k
+
+        if interpret is None:
+            interpret = _backend() != "tpu"
+        return _k.ssd_pallas(x, dt, A, B, C, chunk, initial_state,
+                             interpret=interpret)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    return _ref.ssd_decode_step_ref(state, x_t, dt_t, A, B_t, C_t)

@@ -1,0 +1,119 @@
+"""Pure-jnp oracle for the Mamba-2 SSD (state-space duality) chunked scan.
+
+Math (per head h, state size N, head dim P):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t x_t^T        (state: P x N)
+    y_t = h_t C_t
+Chunked evaluation [arXiv:2405.21060 listing 1]: within-chunk term via the
+masked C B^T "attention" with decay matrix L, cross-chunk term via a small
+recurrence over per-chunk states. The chunk is the HDOT task-level subdomain
+of the sequence; the cross-chunk state hand-off is its halo.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def segsum(dA: jax.Array) -> jax.Array:
+    """dA: (..., q) -> L log-decay matrix (..., q, q):
+    out[i,j] = sum_{j<k<=i} dA_k for j<=i, -inf otherwise."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunk_terms(xc, dtc, A, Bc, Cc):
+    """Per-chunk quantities. Shapes (b=batch, c=chunks, q=chunk, h, p, n):
+       xc (b,c,q,h,p)  dtc (b,c,q,h)  A (h,)  Bc,Cc (b,c,q,n)
+    Returns Y_diag (b,c,q,h,p), states (b,c,h,p,n), decays:
+       decay_chunk (b,c,h)  decay_in (b,c,q,h)."""
+    dA = dtc * A                                                   # (b,c,q,h)
+    L = jnp.exp(segsum(jnp.moveaxis(dA, -1, -2)))                  # (b,c,h,q,q)
+    att = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)                    # (b,c,q,k)
+    xdt = xc * dtc[..., None]                                      # (b,c,q,h,p)
+    y_diag = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", att, L, xdt)
+
+    cs = jnp.cumsum(dA, axis=2)                                    # (b,c,q,h)
+    total = cs[:, :, -1:, :]                                       # (b,c,1,h)
+    decay_states = jnp.exp(total - cs)                             # (b,c,q,h)
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn", Bc, decay_states, xdt)
+    decay_chunk = jnp.exp(total[:, :, 0, :])                       # (b,c,h)
+    decay_in = jnp.exp(cs)                                         # (b,c,q,h)
+    return y_diag, states, decay_chunk, decay_in
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+            C: jax.Array, chunk: int,
+            initial_state: jax.Array | None = None,
+            unroll_chunks: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x (b,l,h,p), dt (b,l,h) [post-softplus], A (h,) [negative],
+    B,C (b,l,n). Returns (y (b,l,h,p), final_state (b,h,p,n))."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    c, q = l // chunk, chunk
+    xc = x.reshape(b, c, q, h, p)
+    dtc = dt.reshape(b, c, q, h)
+    Bc = B.reshape(b, c, q, n)
+    Cc = C.reshape(b, c, q, n)
+
+    y_diag, states, decay_chunk, decay_in = ssd_chunk_terms(xc, dtc, A, Bc, Cc)
+
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st_c, dec_c = inp                                          # (b,h,p,n),(b,h)
+        prev = carry
+        new = prev * dec_c[..., None, None] + st_c.astype(jnp.float32)
+        return new, prev
+
+    if unroll_chunks:  # analysis lowering: FLOPs of every chunk visible
+        prevs = []
+        carry = s0
+        for i in range(c):
+            carry, prev = step(carry, (states[:, i], decay_chunk[:, i]))
+            prevs.append(prev)
+        prev_states = jnp.stack(prevs, axis=1)                     # (b,c,h,p,n)
+        final = carry
+    else:
+        final, prev_states = jax.lax.scan(
+            step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(decay_chunk, 1, 0)))
+        prev_states = jnp.moveaxis(prev_states, 0, 1)
+
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc,
+                       prev_states.astype(x.dtype), decay_in.astype(x.dtype))
+    y = (y_diag + y_off).reshape(b, l, h, p).astype(x.dtype)
+    return y, final
+
+
+def ssd_sequential(x, dt, A, B, C, initial_state=None):
+    """O(l) sequential recurrence — ground truth for validating the chunked
+    algorithm itself (tests only; slow)."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    st = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    ys = []
+    for t in range(l):
+        dA = jnp.exp(dt[:, t] * A)                                 # (b,h)
+        inp = jnp.einsum("bh,bhp,bn->bhpn", dt[:, t], x[:, t].astype(jnp.float32),
+                         B[:, t].astype(jnp.float32))
+        st = st * dA[..., None, None] + inp
+        ys.append(jnp.einsum("bhpn,bn->bhp", st, C[:, t].astype(jnp.float32)))
+    return jnp.stack(ys, axis=1).astype(x.dtype), st
+
+
+def ssd_decode_step_ref(state, x_t, dt_t, A, B_t, C_t):
+    """One-token recurrence. state (b,h,p,n); x_t (b,h,p); dt_t (b,h);
+    B_t,C_t (b,n). Returns (y (b,h,p), new state)."""
+    dA = jnp.exp(dt_t * A)                                         # (b,h)
+    inp = jnp.einsum("bh,bhp,bn->bhpn", dt_t, x_t.astype(jnp.float32),
+                     B_t.astype(jnp.float32))
+    new = state.astype(jnp.float32) * dA[..., None, None] + inp
+    y = jnp.einsum("bhpn,bn->bhp", new, C_t.astype(jnp.float32))
+    return y.astype(x_t.dtype), new

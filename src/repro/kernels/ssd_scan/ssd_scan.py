@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: Mamba-2 SSD within-chunk terms.
+
+One grid step = one (batch, chunk, head) task-level subdomain. The kernel
+computes the chunk-local quantities (decay matrix L via segsum, the masked
+C B^T "attention" matmul on the MXU, the chunk input-state contribution); the
+tiny cross-chunk recurrence (c steps over a (p, n) state) and the off-diagonal
+C @ state matmul run in jnp outside — the state hand-off is the sequence
+halo between subdomains.
+
+VMEM per step ~ q*p + 2*q*n + 2*q*q floats; defaults (q=256, p=64, n=128)
+~ 0.9 MB. q x q and q x n tiles are MXU-aligned (multiples of 128 for n,
+q chosen as a multiple of 128 in production configs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+            ydiag_ref, states_ref, decayin_ref):
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)          # (q, p)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)           # (q,)
+    A = a_ref[0, 0]                                        # scalar
+    B = b_ref[0, 0].astype(jnp.float32)                   # (q, n)
+    C = c_ref[0, 0].astype(jnp.float32)                   # (q, n)
+    q = x.shape[0]
+
+    dA = dt * A                                            # (q,)
+    cs = jnp.cumsum(dA)                                    # (q,)
+    diff = cs[:, None] - cs[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(jj <= ii, jnp.exp(diff), 0.0)            # (q, q)
+
+    att = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())))   # (q, q)
+    xdt = x * dt[:, None]                                  # (q, p)
+    ydiag_ref[0, 0, :, 0, :] = (att * L @ xdt).astype(ydiag_ref.dtype)
+
+    decay_states = jnp.exp(cs[-1] - cs)                    # (q,)
+    st = jax.lax.dot_general(B * decay_states[:, None], xdt,
+                             (((0,), (0,)), ((), ())))     # (n, p)
+    states_ref[0, 0, 0, :, :] = st.astype(states_ref.dtype)
+    decayin_ref[0, 0, :, 0] = jnp.exp(cs).astype(decayin_ref.dtype)
+
+
+def ssd_pallas(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+               C: jax.Array, chunk: int, initial_state=None,
+               interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Same contract as kernels.ssd_scan.ref.ssd_ref."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0
+    c, q = l // chunk, chunk
+    xc = x.reshape(b, c, q, h, p)
+    dtc = dt.reshape(b, c, q, h)
+    Bc = B.reshape(b, c, q, n)
+    Cc = C.reshape(b, c, q, n)
+    A2 = jnp.broadcast_to(A.astype(jnp.float32)[None, :], (1, h))
+
+    y_diag, states, decay_in = pl.pallas_call(
+        _kernel,
+        grid=(b, c, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, 1, p), lambda ib, ic, ih: (ib, ic, 0, ih, 0)),
+            pl.BlockSpec((1, 1, q, 1), lambda ib, ic, ih: (ib, ic, 0, ih)),
+            pl.BlockSpec((1, 1), lambda ib, ic, ih: (0, ih)),
+            pl.BlockSpec((1, 1, q, n), lambda ib, ic, ih: (ib, ic, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda ib, ic, ih: (ib, ic, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, 1, p), lambda ib, ic, ih: (ib, ic, 0, ih, 0)),
+            pl.BlockSpec((1, 1, 1, n, p), lambda ib, ic, ih: (ib, ic, ih, 0, 0)),
+            pl.BlockSpec((1, 1, q, 1), lambda ib, ic, ih: (ib, ic, 0, ih)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, c, q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, c, h, n, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, c, q, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xc, dtc, A2, Bc, Cc)
+
+    decay_chunk = decay_in[:, :, -1, :]                    # (b, c, h)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st_c, dec_c = inp                                  # (b,h,n,p), (b,h)
+        prev = carry
+        new = prev * dec_c[..., None, None] + jnp.swapaxes(st_c, -1, -2)
+        return new, prev
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(decay_chunk, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # (b,c,h,p,n)
+
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc.astype(jnp.float32),
+                       prev_states, decay_in)
+    y = (y_diag + y_off).reshape(b, l, h, p).astype(x.dtype)
+    return y, final

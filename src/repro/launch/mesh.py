@@ -1,0 +1,56 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required because the dry-run must set XLA_FLAGS
+before jax initializes, and smoke tests must see exactly 1 CPU device.
+
+Axis roles (DESIGN.md §4):
+  pod    — slowest hop (inter-pod). Carries only gradient/MoE collectives.
+  data   — intra-pod DP/FSDP axis.
+  model  — fastest hop (intra-pod ICI ring): TP/SP/EP axis.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def _auto(n: int):
+    from jax.sharding import AxisType
+
+    return (AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh for tests/benchmarks (e.g. (8,), ('data',) on 8 host
+    devices)."""
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_single_device_mesh(axes: Tuple[str, ...] = ("data", "model")) -> Mesh:
+    """1-device mesh with the production axis names: lets the full sharded
+    code path run on one CPU device (every axis has size 1)."""
+    return jax.make_mesh((1,) * len(axes), axes, axis_types=_auto(len(axes)))
+
+
+def describe(mesh: Mesh) -> str:
+    return " x ".join(
+        f"{n}={s}" for n, s in zip(mesh.axis_names, mesh.devices.shape))
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def validate_production_mesh(mesh: Mesh, *, multi_pod: bool) -> None:
+    want = (2, 16, 16) if multi_pod else (16, 16)
+    assert tuple(mesh.devices.shape) == want, (mesh.devices.shape, want)
+    assert mesh.devices.size == (512 if multi_pod else 256)

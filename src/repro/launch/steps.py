@@ -1,0 +1,180 @@
+"""Step builders shared by the dry-run, the trainer and the server.
+
+A *cell* is (architecture x input shape). `build_cell` returns the jitted-able
+step function plus abstract arg specs, logical axes and donation info — the
+dry-run lowers it with ShapeDtypeStructs, the real drivers call it with
+arrays. One code path for both is the point: the dry-run proves exactly what
+production would run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.elastic import shardings_for
+from repro.config.base import ModelConfig, ParallelConfig
+from repro.config.shapes import ShapeConfig
+from repro.core.overlap import accumulate_grads, grad_sync
+from repro.models.model import LanguageModel, ModelOptions, build_model, input_specs
+from repro.models.layers import abstract_from_specs, axes_from_specs
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+from repro.sharding.rules import ShardingContext, use_sharding
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Cell:
+    """One lowered unit of work: fn(*args) with full sharding metadata."""
+
+    name: str
+    fn: Callable
+    arg_specs: Tuple[PyTree, ...]       # ShapeDtypeStruct trees (positional)
+    arg_axes: Tuple[PyTree, ...]        # logical-axes trees (same structure)
+    donate_argnums: Tuple[int, ...]
+    model: LanguageModel
+    kind: str                           # train | prefill | decode
+
+    @property
+    def rules(self):
+        from repro.sharding.rules import rules_for
+
+        return rules_for(self.kind, self.model.cfg.d_model,
+                         self.model.cfg.family)
+
+    def context(self, mesh) -> ShardingContext:
+        return ShardingContext(mesh, self.rules)
+
+    def in_shardings(self, mesh) -> Tuple[PyTree, ...]:
+        ctx = self.context(mesh)
+        return tuple(shardings_for(s, a, mesh, ctx)
+                     for s, a in zip(self.arg_specs, self.arg_axes))
+
+    def lower(self, mesh, out_shardings=None):
+        with use_sharding(mesh, self.rules), mesh:
+            jitted = jax.jit(self.fn,
+                             in_shardings=self.in_shardings(mesh),
+                             out_shardings=out_shardings,
+                             donate_argnums=self.donate_argnums)
+            return jitted.lower(*self.arg_specs)
+
+
+# --------------------------------------------------------------------- train
+def make_train_step(model: LanguageModel, parallel: ParallelConfig,
+                    opt_cfg: Optional[AdamWConfig] = None,
+                    warmup_steps: int = 100, total_steps: int = 10_000
+                    ) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    Gradient reduction over the DP axes is left to GSPMD (params sharded
+    FSDP-style); parallel.overlap selects the explicit HDOT bucketed schedule
+    when the step runs under shard_map-style manual axes (trainer benches).
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+    accum = parallel.accum_steps
+    # Layer-chunked optimizer update is available (adamw_update chunk_leading)
+    # but measured WORSE on the XLA-CPU dry-run (+12 GB: while-loop outputs
+    # don't alias donated inputs); the unchunked elementwise update fuses to
+    # ~zero temp on the TPU target. Keep unchunked. (EXPERIMENTS §Perf it. 2)
+    chunk_leading = 0
+    p_axes = model.param_axes()
+
+    def constrain_like_params(grads):
+        """Anchor gradient shardings to the parameter placements. Without
+        this, GSPMD replicates the (vocab, d_model) embedding/lm_head grads
+        (scatter-add / final dot) — measured 8.4 GB/chip f32 buffers for
+        llama3-405b (EXPERIMENTS §Perf iteration 1)."""
+        from repro.sharding.rules import with_logical
+
+        return jax.tree.map(
+            lambda g, ax: with_logical(g, ax), grads, p_axes)
+
+    def loss_and_grad(params, batch):
+        loss, grads = jax.value_and_grad(model.train_loss)(params, batch)
+        return loss, constrain_like_params(grads)
+
+    def step_fn(params, opt_state, batch):
+        loss, grads = accumulate_grads(loss_and_grad, params, batch, accum)
+        lr = warmup_cosine(opt_state["step"], opt_cfg.lr, warmup_steps,
+                           total_steps)
+        params, opt_state, gnorm = adamw_update(grads, opt_state, params,
+                                                opt_cfg, lr,
+                                                chunk_leading=chunk_leading)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+
+    return step_fn
+
+
+# --------------------------------------------------------------------- serve
+def make_prefill_step(model: LanguageModel) -> Callable:
+    def prefill_fn(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_fn
+
+
+def make_decode_step(model: LanguageModel) -> Callable:
+    def decode_fn(params, caches, token, pos):
+        logits, new_caches = model.decode_step(params, token, caches, pos)
+        return logits, new_caches
+
+    return decode_fn
+
+
+# ---------------------------------------------------------------- cell build
+def opt_state_specs(model: LanguageModel, moment_dtype=jnp.float32
+                    ) -> Tuple[PyTree, PyTree]:
+    """(abstract opt state, logical axes) matching adamw_init(params)."""
+    p_abs = model.abstract_params()
+    p_axes = model.param_axes()
+    mom = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, moment_dtype),
+                       p_abs)
+    specs = {"m": mom, "v": mom,
+             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    axes = {"m": p_axes, "v": p_axes, "step": ()}
+    return specs, axes
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig,
+               options: Optional[ModelOptions] = None,
+               parallel: Optional[ParallelConfig] = None,
+               moment_dtype=jnp.float32) -> Cell:
+    parallel = parallel or ParallelConfig()
+    options = options or ModelOptions(
+        attn_impl="blockwise" if shape.seq_len > 8192 else "dense",
+        scan_layers=parallel.scan_layers, remat=parallel.remat)
+    model = build_model(cfg, options)
+    io = input_specs(cfg, shape, options)
+    batch_specs, batch_axes = io["specs"], io["axes"]
+    p_abs = model.abstract_params()
+    p_axes = model.param_axes()
+
+    if shape.kind == "train":
+        fn = make_train_step(model, parallel)
+        o_abs, o_axes = opt_state_specs(model, moment_dtype)
+        return Cell(
+            name=f"{cfg.name}:{shape.name}", fn=fn,
+            arg_specs=(p_abs, o_abs, batch_specs),
+            arg_axes=(p_axes, o_axes, batch_axes),
+            donate_argnums=(0, 1), model=model, kind="train")
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(model)
+        return Cell(
+            name=f"{cfg.name}:{shape.name}", fn=fn,
+            arg_specs=(p_abs, batch_specs),
+            arg_axes=(p_axes, batch_axes),
+            donate_argnums=(), model=model, kind="prefill")
+
+    # decode: batch_specs = {'token', 'caches', 'pos'}
+    fn = make_decode_step(model)
+    return Cell(
+        name=f"{cfg.name}:{shape.name}", fn=fn,
+        arg_specs=(p_abs, batch_specs["caches"], batch_specs["token"],
+                   batch_specs["pos"]),
+        arg_axes=(p_axes, batch_axes["caches"], batch_axes["token"],
+                  batch_axes["pos"]),
+        donate_argnums=(1,), model=model, kind="decode")

@@ -1,0 +1,15 @@
+from repro.models.model import (
+    LanguageModel,
+    abstract_params,
+    build_model,
+    init_params,
+    input_specs,
+)
+
+__all__ = [
+    "LanguageModel",
+    "abstract_params",
+    "build_model",
+    "init_params",
+    "input_specs",
+]

@@ -1,0 +1,273 @@
+"""LanguageModel: the public model API used by trainer / server / dry-run.
+
+Entry points per shape kind:
+  train_loss(params, batch)              -- batch: tokens/targets (+ frontend stubs)
+  prefill(params, batch)                 -- returns (logits_last, caches)
+  decode_step(params, token, caches, pos)-- one token against the caches
+
+`input_specs` produces ShapeDtypeStructs (+ logical axes) for every entry
+point so the multi-pod dry-run lowers without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig, ParallelConfig
+from repro.config.shapes import ShapeConfig
+from repro.models import attention as attn
+from repro.models import transformer as tfm
+from repro.models.layers import (
+    ParamSpec,
+    abstract_from_specs,
+    axes_from_specs,
+    init_from_specs,
+    layer_norm,
+    mlp_apply,
+    mlp_specs,
+    rms_norm,
+    sinusoidal_embedding,
+)
+from repro.sharding.rules import with_logical
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelOptions:
+    attn_impl: str = "dense"          # dense | blockwise | blockwise_unrolled | flash
+    attn_chunk: int = 1024
+    scan_layers: bool = True
+    remat: str = "none"
+    unroll_chunks: bool = False       # SSD chunk loop unrolled (analysis lowering)
+    # fused linear+cross-entropy custom-VJP (models/xent.py). Targets the
+    # GSPMD/jit path; under shard_map manual axes custom_vjp cotangent
+    # varying-axes checks reject it -> manual-mode callers set False.
+    fused_xent: bool = True
+    dtype: Any = jnp.bfloat16
+
+
+class LanguageModel:
+    def __init__(self, cfg: ModelConfig, options: Optional[ModelOptions] = None):
+        self.cfg = cfg
+        self.opt = options or ModelOptions()
+
+    # ------------------------------------------------------------------ specs
+    def param_specs(self) -> PyTree:
+        cfg, dt = self.cfg, self.opt.dtype
+        specs: Dict[str, Any] = {
+            "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                               dt, scale=cfg.d_model ** -0.5),
+            "layers": tfm.stack_specs(cfg, self.opt.scan_layers, dt),
+        }
+        specs.update(tfm._norm_specs(cfg, "final_norm"))
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                         ("embed", "vocab"), dt)
+        if cfg.family == "encdec":
+            enc_cfg = dataclasses.replace(cfg, num_layers=cfg.encdec.enc_layers)
+            self._enc_cfg = enc_cfg
+            specs["encoder"] = [tfm.layer_specs(enc_cfg, "attn", dt)
+                                for _ in range(cfg.encdec.enc_layers)]
+            specs.update(tfm._norm_specs(cfg, "enc_norm"))
+        if cfg.family == "vlm":
+            # stub projection for precomputed patch embeddings (identity-sized)
+            specs["vision_proj"] = ParamSpec((cfg.d_model, cfg.d_model),
+                                             ("embed", None), dt)
+        if cfg.family == "encdec":
+            specs["audio_proj"] = ParamSpec((cfg.d_model, cfg.d_model),
+                                            ("embed", None), dt)
+        return specs
+
+    def init(self, rng: jax.Array) -> PyTree:
+        return init_from_specs(self.param_specs(), rng)
+
+    def abstract_params(self) -> PyTree:
+        return abstract_from_specs(self.param_specs())
+
+    def param_axes(self) -> PyTree:
+        return axes_from_specs(self.param_specs())
+
+    # ------------------------------------------------------------- embeddings
+    def _embed(self, params, tokens: jax.Array) -> jax.Array:
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if self.cfg.family == "encdec":
+            x = x + sinusoidal_embedding(tokens.shape[1], self.cfg.d_model
+                                         ).astype(x.dtype)[None]
+        return x * jnp.asarray(self.cfg.d_model ** 0.5, x.dtype)
+
+    def _unembed(self, params, x: jax.Array) -> jax.Array:
+        x = tfm._norm(params, x, self.cfg, "final_norm")
+        if self.cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+        else:
+            logits = x @ params["lm_head"]
+        return with_logical(logits.astype(jnp.float32), ("batch", "seq", "vocab"))
+
+    def _encode(self, params, frames: jax.Array) -> jax.Array:
+        """Whisper encoder over stub frame embeddings."""
+        cfg = self.cfg
+        x = (frames @ params["audio_proj"]
+             + sinusoidal_embedding(frames.shape[1], cfg.d_model
+                                    ).astype(frames.dtype)[None])
+        b, t, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(t), (b, t))
+        enc_cfg = dataclasses.replace(cfg, num_layers=cfg.encdec.enc_layers)
+        for p_l in params["encoder"]:
+            x, _, _ = tfm.layer_apply(p_l, x, enc_cfg, "attn", pos, "train",
+                                      None, None, self.opt.attn_impl)
+        return layer_norm(x, params["enc_norm"], params["enc_norm_b"], cfg.norm_eps)
+
+    def _prepend_frontend(self, params, x: jax.Array, batch: Dict) -> jax.Array:
+        if self.cfg.family == "vlm":
+            patches = batch["patches"] @ params["vision_proj"]
+            x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        return x
+
+    # ---------------------------------------------------------------- forward
+    def _forward(self, params, batch: Dict, mode: str, caches=None,
+                 pos=None) -> Tuple[jax.Array, Any, jax.Array]:
+        cfg = self.cfg
+        tokens = batch["token"] if mode == "decode" else batch["tokens"]
+        tokens = with_logical(tokens, ("batch", "seq"))
+        x = self._embed(params, tokens)
+        if mode != "decode":
+            x = self._prepend_frontend(params, x, batch)
+        b, s, _ = x.shape
+        if mode == "decode":
+            positions = jnp.broadcast_to(pos, (b, 1))
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        x = with_logical(x, ("batch", "seq", None) if mode != "decode"
+                         else ("batch", None, None))
+
+        enc_out = None
+        if cfg.family == "encdec" and mode != "decode":
+            enc_out = self._encode(params, batch["frames"])
+
+        x, new_caches, aux = tfm.stack_apply(
+            params["layers"], x, cfg, positions, mode, caches, pos,
+            self.opt.attn_impl, remat=self.opt.remat, enc_out=enc_out,
+            unroll_chunks=self.opt.unroll_chunks)
+        return x, new_caches, aux
+
+    # ------------------------------------------------------------ entry points
+    def train_loss(self, params, batch: Dict) -> jax.Array:
+        x, _, aux = self._forward(params, batch, "train")
+        if self.cfg.family == "vlm":   # strip patch positions from the loss
+            x = x[:, self.cfg.num_vision_patches:]
+        targets = batch["targets"]
+        if self.opt.fused_xent:
+            x = tfm._norm(params, x, self.cfg, "final_norm")
+            from repro.models.xent import linear_xent
+
+            w = (params["embed"].T if self.cfg.tie_embeddings
+                 else params["lm_head"])
+            loss = linear_xent(x, w, targets)
+        else:
+            logits = self._unembed(params, x)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+            loss = -jnp.mean(ll)
+        return loss + aux.astype(loss.dtype)
+
+    def prefill(self, params, batch: Dict,
+                max_len: Optional[int] = None) -> Tuple[jax.Array, Any]:
+        """`max_len` sizes the ring caches for the decode phase that follows;
+        without it the cache holds exactly the prompt and the FIRST generated
+        token evicts prompt token 0 (caught by
+        test_prefill_decode_matches_full_forward)."""
+        caches = self._init_caches_for_prefill(batch, max_len)
+        x, new_caches, _ = self._forward(params, batch, "prefill", caches=caches)
+        logits = self._unembed(params, x[:, -1:])
+        return logits, new_caches
+
+    def decode_step(self, params, token: jax.Array, caches, pos: jax.Array
+                    ) -> Tuple[jax.Array, Any]:
+        x, new_caches, _ = self._forward(params, {"token": token}, "decode",
+                                         caches=caches, pos=pos)
+        logits = self._unembed(params, x)
+        return logits, new_caches
+
+    # ----------------------------------------------------------------- caches
+    def cache_specs(self, batch: int, max_len: int) -> PyTree:
+        return tfm.stack_cache_specs(self.cfg, batch, max_len,
+                                     self.opt.scan_layers, self.opt.dtype)
+
+    def init_caches(self, batch: int, max_len: int) -> PyTree:
+        return init_from_specs(self.cache_specs(batch, max_len),
+                               jax.random.PRNGKey(0))
+
+    def _init_caches_for_prefill(self, batch: Dict,
+                                 max_len: Optional[int] = None) -> PyTree:
+        b, s = batch["tokens"].shape
+        if self.cfg.family == "vlm":
+            s += self.cfg.num_vision_patches
+        return self.init_caches(b, max(s, max_len or 0))
+
+
+# ------------------------------------------------------------------- factories
+def build_model(cfg: ModelConfig, options: Optional[ModelOptions] = None
+                ) -> LanguageModel:
+    return LanguageModel(cfg, options)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0,
+                options: Optional[ModelOptions] = None) -> PyTree:
+    return build_model(cfg, options).init(jax.random.PRNGKey(seed))
+
+
+def abstract_params(cfg: ModelConfig, options: Optional[ModelOptions] = None
+                    ) -> PyTree:
+    return build_model(cfg, options).abstract_params()
+
+
+# ------------------------------------------------------------------ input specs
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                options: Optional[ModelOptions] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins (+ logical axes) for a dry-run cell.
+
+    train/prefill: {'tokens', 'targets'?, 'patches'?, 'frames'?}
+    decode:        {'token', 'caches', 'pos'}
+    """
+    model = build_model(cfg, options)
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def tok(bb, ss):
+        return jax.ShapeDtypeStruct((bb, ss), i32)
+
+    specs: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    if shape.kind == "train":
+        s_text = s - (cfg.num_vision_patches if cfg.family == "vlm" else 0)
+        specs["tokens"] = tok(b, s_text)
+        axes["tokens"] = ("batch", "seq")
+        specs["targets"] = tok(b, s_text)
+        axes["targets"] = ("batch", "seq")
+    elif shape.kind == "prefill":
+        s_text = s - (cfg.num_vision_patches if cfg.family == "vlm" else 0)
+        specs["tokens"] = tok(b, s_text)
+        axes["tokens"] = ("batch", "seq")
+    else:  # decode
+        specs["token"] = tok(b, 1)
+        axes["token"] = ("batch", None)
+        cspecs = model.cache_specs(b, s)
+        specs["caches"] = abstract_from_specs(cspecs)
+        axes["caches"] = axes_from_specs(cspecs)
+        specs["pos"] = jax.ShapeDtypeStruct((), i32)
+        axes["pos"] = ()
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_vision_patches, cfg.d_model), jnp.bfloat16)
+            axes["patches"] = ("batch", None, None)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encdec.enc_seq, cfg.d_model), jnp.bfloat16)
+            axes["frames"] = ("batch", None, None)
+    return {"specs": specs, "axes": axes}

@@ -1,0 +1,100 @@
+"""Griffin/RecurrentGemma recurrent block: conv1d -> RG-LRU, gated
+[arXiv:2402.19427].
+
+    r_t = sigmoid(x_t Wr + br)            (recurrence gate)
+    i_t = sigmoid(x_t Wi + bi)            (input gate)
+    a_t = exp(-c * softplus(L) * r_t)     (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The linear recurrence runs through kernels/lru_scan (associative-scan oracle /
+Pallas chunked kernel). lru_width rides the TP axis.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.kernels.lru_scan import ops as lru_ops
+from repro.models.layers import ParamSpec
+from repro.sharding.rules import with_logical
+
+_C = 8.0
+
+
+def rglru_specs(cfg: ModelConfig, dtype=jnp.bfloat16) -> Dict[str, ParamSpec]:
+    hb = cfg.hybrid
+    assert hb is not None
+    d = cfg.d_model
+    w = hb.lru_width or d
+    k = hb.conv_kernel
+    return {
+        "w_gate": ParamSpec((d, w), ("embed", "lru"), dtype),
+        "w_in": ParamSpec((d, w), ("embed", "lru"), dtype),
+        "conv": ParamSpec((k, w), ("conv", "lru"), dtype),
+        "wr": ParamSpec((w, w), ("lru", None), dtype),
+        "br": ParamSpec((w,), (None,), jnp.float32, "zeros"),
+        "wi": ParamSpec((w, w), ("lru", None), dtype),
+        "bi": ParamSpec((w,), (None,), jnp.float32, "zeros"),
+        "a_log": ParamSpec((w,), (None,), jnp.float32, "zeros"),
+        "w_out": ParamSpec((w, d), ("lru", "embed"), dtype),
+    }
+
+
+def _gates(p, x: jax.Array):
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["wr"].astype(jnp.float32) + p["br"])
+    i = jax.nn.sigmoid(xf @ p["wi"].astype(jnp.float32) + p["bi"])
+    log_a = -_C * jax.nn.softplus(p["a_log"]) * r          # (b,l,w) log decay
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, gated
+
+
+def _conv1d(x: jax.Array, w: jax.Array, state=None):
+    k = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+           if state is None else state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = jnp.zeros_like(x)
+    for j in range(k):
+        out = out + xp[:, j:j + x.shape[1]] * w[j]
+    return out
+
+
+def rglru_block(p, x: jax.Array, cfg: ModelConfig, impl: str = "auto") -> jax.Array:
+    """Full-sequence Griffin recurrent block. x: (b, l, d)."""
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    u = x @ p["w_in"]
+    u = with_logical(u, ("batch", None, "lru"))
+    u = _conv1d(u, p["conv"])
+    a, b = _gates(p, u)
+    h, _ = lru_ops.lru_scan(a, b, impl=impl)
+    y = gate.astype(jnp.float32) * h.astype(jnp.float32)
+    return (y.astype(x.dtype)) @ p["w_out"]
+
+
+def rglru_cache_specs(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    hb = cfg.hybrid
+    w = hb.lru_width or cfg.d_model
+    k = hb.conv_kernel
+    return {
+        "h": ParamSpec((batch, w), ("batch", "lru"), jnp.float32, "zeros"),
+        "conv": ParamSpec((batch, k - 1, w), ("batch", None, "lru"), dtype, "zeros"),
+    }
+
+
+def rglru_decode_step(p, x: jax.Array, cfg: ModelConfig,
+                      cache: Dict) -> Tuple[jax.Array, Dict]:
+    """x: (b, 1, d)."""
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    u = x @ p["w_in"]
+    new_conv = jnp.concatenate([cache["conv"].astype(u.dtype), u], axis=1)[:, 1:]
+    u = _conv1d(u, p["conv"], state=cache["conv"])
+    a, b = _gates(p, u)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    y = gate[:, 0].astype(jnp.float32) * h
+    out = (y.astype(x.dtype) @ p["w_out"])[:, None, :]
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,136 @@
+"""Mamba-2 block (SSD, state-space duality) [arXiv:2405.21060].
+
+Separate z/x/B/C/dt projections (rather than one fused in_proj) keep every
+weight dim cleanly shardable: d_inner and dt-heads ride the TP axis, the small
+state dim replicates. The SSD chunk is the task-level subdomain of the
+sequence; cross-chunk state hand-off is its halo (cf. DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config.base import ModelConfig
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.models.layers import ParamSpec, rms_norm
+from repro.sharding.rules import with_logical
+
+
+def ssm_specs(cfg: ModelConfig, dtype=jnp.bfloat16) -> Dict[str, ParamSpec]:
+    s = cfg.ssm
+    assert s is not None
+    d = cfg.d_model
+    di = s.d_inner(d)
+    h = s.num_heads(d)
+    n = s.state_dim
+    k = s.conv_kernel
+    return {
+        "wz": ParamSpec((d, di), ("embed", "mlp"), dtype),
+        "wx": ParamSpec((d, di), ("embed", "mlp"), dtype),
+        "wB": ParamSpec((d, n), ("embed", "state"), dtype),
+        "wC": ParamSpec((d, n), ("embed", "state"), dtype),
+        "wdt": ParamSpec((d, h), ("embed", "heads"), dtype),
+        "dt_bias": ParamSpec((h,), ("heads",), jnp.float32, "zeros"),
+        "A_log": ParamSpec((h,), ("heads",), jnp.float32, "zeros"),
+        "D": ParamSpec((h,), ("heads",), jnp.float32, "ones"),
+        "conv_x": ParamSpec((k, di), ("conv", "mlp"), dtype),
+        "conv_B": ParamSpec((k, n), ("conv", "state"), dtype),
+        "conv_C": ParamSpec((k, n), ("conv", "state"), dtype),
+        "norm": ParamSpec((di,), ("mlp",), jnp.float32, "ones"),
+        "wo": ParamSpec((di, d), ("mlp", "embed"), dtype),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array,
+                           state: Optional[jax.Array] = None) -> jax.Array:
+    """x: (b, l, c); w: (k, c). Causal depthwise conv; `state` is the last
+    (k-1) inputs from the previous segment (decode/chunk hand-off)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = jnp.zeros_like(x)
+    for j in range(k):
+        out = out + xp[:, j:j + x.shape[1]] * w[j]
+    return jax.nn.silu(out)
+
+
+def _project(p, u: jax.Array, cfg: ModelConfig):
+    s = cfg.ssm
+    z = u @ p["wz"]
+    x = u @ p["wx"]
+    B = u @ p["wB"]
+    C = u @ p["wC"]
+    dt = jax.nn.softplus(u.astype(jnp.float32) @ p["wdt"].astype(jnp.float32)
+                         + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    del s
+    return z, x, B, C, dt, A
+
+
+def ssm_apply(p, u: jax.Array, cfg: ModelConfig,
+              unroll_chunks: bool = False, impl: str = "auto") -> jax.Array:
+    """Full-sequence Mamba-2 block. u: (b, l, d)."""
+    s = cfg.ssm
+    assert s is not None
+    b, l, d = u.shape
+    z, x, B, C, dt, A = _project(p, u, cfg)
+    x = _causal_depthwise_conv(x, p["conv_x"])
+    B = _causal_depthwise_conv(B, p["conv_B"])
+    C = _causal_depthwise_conv(C, p["conv_C"])
+    h = s.num_heads(d)
+    xh = x.reshape(b, l, h, s.head_dim)
+    xh = with_logical(xh, ("batch", None, "act_heads", None))
+    chunk = min(s.chunk_size, l)
+    y, _ = ssd_ops.ssd(xh, dt, A, B, C, chunk, impl=impl,
+                       unroll_chunks=unroll_chunks)
+    y = y + xh * p["D"][:, None].astype(xh.dtype)
+    y = y.reshape(b, l, -1)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["wo"]
+
+
+# ----------------------------------------------------------------- decode path
+def ssm_cache_specs(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    h = s.num_heads(cfg.d_model)
+    k = s.conv_kernel
+    return {
+        "state": ParamSpec((batch, h, s.head_dim, s.state_dim),
+                           ("batch", "act_heads", None, None), jnp.float32, "zeros"),
+        "conv_x": ParamSpec((batch, k - 1, di), ("batch", None, "mlp"), dtype, "zeros"),
+        "conv_B": ParamSpec((batch, k - 1, s.state_dim), ("batch", None, None), dtype, "zeros"),
+        "conv_C": ParamSpec((batch, k - 1, s.state_dim), ("batch", None, None), dtype, "zeros"),
+    }
+
+
+def ssm_decode_step(p, u: jax.Array, cfg: ModelConfig, cache: Dict) -> Tuple[jax.Array, Dict]:
+    """u: (b, 1, d); cache: see ssm_cache_specs."""
+    s = cfg.ssm
+    b = u.shape[0]
+    z, x, B, C, dt, A = _project(p, u, cfg)
+
+    def conv_step(x1, w, st):
+        y = _causal_depthwise_conv(x1, w, state=st)
+        new_st = jnp.concatenate([st.astype(x1.dtype), x1], axis=1)[:, 1:]
+        return y, new_st
+
+    x, cx = conv_step(x, p["conv_x"], cache["conv_x"])
+    B, cB = conv_step(B, p["conv_B"], cache["conv_B"])
+    C, cC = conv_step(C, p["conv_C"], cache["conv_C"])
+
+    h = s.num_heads(cfg.d_model)
+    xh = x.reshape(b, h, s.head_dim)
+    y, new_state = ssd_ops.ssd_decode_step(cache["state"], xh, dt[:, 0], A,
+                                           B[:, 0], C[:, 0])
+    y = y + xh * p["D"][:, None].astype(xh.dtype)
+    y = y.reshape(b, 1, -1)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["wo"]
+    return out, {"state": new_state, "conv_x": cx, "conv_B": cB, "conv_C": cC}

@@ -1,0 +1,313 @@
+"""Layer stacks for every assigned family.
+
+One `layer_apply` handles the per-family block composition; the stack runs it
+either scanned (uniform layers: compile-time O(1) in depth — the runnable
+lowering) or unrolled (per-layer HLO visible — the analysis lowering, and the
+only mode for heterogeneous stacks: hybrid patterns, encoder-decoder).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import ParamSpec, layer_norm, mlp_apply, mlp_specs, rms_norm
+from repro.sharding.rules import with_logical
+
+PyTree = Any
+
+
+# ------------------------------------------------------------------ block map
+def block_kinds(cfg: ModelConfig) -> List[str]:
+    """Per-layer temporal-mixing kind."""
+    if cfg.family in ("dense", "vlm"):
+        return ["attn"] * cfg.num_layers
+    if cfg.family == "moe":
+        return ["attn_moe"] * cfg.num_layers
+    if cfg.family == "ssm":
+        return ["ssm"] * cfg.num_layers
+    if cfg.family == "hybrid":
+        pat = cfg.hybrid.pattern
+        return [("local_attn" if pat[i % len(pat)] == "attn" else "rglru")
+                for i in range(cfg.num_layers)]
+    if cfg.family == "encdec":
+        return ["decoder"] * cfg.num_layers
+    raise ValueError(cfg.family)
+
+
+def uniform_stack(cfg: ModelConfig) -> bool:
+    kinds = block_kinds(cfg)
+    return all(k == kinds[0] for k in kinds) and cfg.family != "encdec"
+
+
+# ---------------------------------------------------------------------- specs
+def _norm_specs(cfg: ModelConfig, name: str) -> Dict[str, ParamSpec]:
+    if cfg.family == "encdec":   # whisper uses LayerNorm w/ bias
+        return {name: ParamSpec((cfg.d_model,), (None,), jnp.float32, "ones"),
+                name + "_b": ParamSpec((cfg.d_model,), (None,), jnp.float32, "zeros")}
+    return {name: ParamSpec((cfg.d_model,), (None,), jnp.float32, "ones")}
+
+
+def _norm(p, x, cfg: ModelConfig, name: str):
+    if cfg.family == "encdec":
+        return layer_norm(x, p[name], p[name + "_b"], cfg.norm_eps)
+    return rms_norm(x, p[name], cfg.norm_eps)
+
+
+def layer_specs(cfg: ModelConfig, kind: str, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    s: Dict[str, Any] = {}
+    s.update(_norm_specs(cfg, "norm1"))
+    if kind in ("attn", "attn_moe", "local_attn", "decoder"):
+        s["attn"] = attn.attention_specs(cfg, dtype)
+    elif kind == "ssm":
+        s["ssm"] = ssm_mod.ssm_specs(cfg, dtype)
+        return s  # mamba2 block has no separate MLP
+    elif kind == "rglru":
+        s["rglru"] = rglru_mod.rglru_specs(cfg, dtype)
+    if kind == "decoder":
+        s.update(_norm_specs(cfg, "norm_cross"))
+        s["cross"] = attn.cross_attention_specs(cfg, dtype)
+    s.update(_norm_specs(cfg, "norm2"))
+    if kind == "attn_moe":
+        s["moe"] = moe_mod.moe_specs(cfg, dtype)
+    else:
+        s["mlp"] = mlp_specs(cfg.d_model, cfg.d_ff, dtype)
+    return s
+
+
+# ---------------------------------------------------------------------- apply
+def layer_apply(p, x: jax.Array, cfg: ModelConfig, kind: str,
+                positions: jax.Array, mode: str,
+                cache: Optional[Dict], pos: Optional[jax.Array],
+                attn_impl: str, enc_out=None, unroll_chunks: bool = False,
+                ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """One block. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Optional[Dict] = None
+    window = cfg.sliding_window
+    if kind == "local_attn":
+        window = cfg.hybrid.local_window
+
+    h = _norm(p, x, cfg, "norm1")
+    if kind in ("attn", "attn_moe", "local_attn", "decoder"):
+        self_cache = cache["self"] if (cache is not None and "self" in cache) else cache
+        if mode == "train":
+            y = attn.self_attention(p["attn"], h, cfg, positions, causal=True,
+                                    impl=attn_impl, window=window)
+        elif mode == "prefill":
+            y, new_self = attn.prefill_attention(p["attn"], h, cfg, positions,
+                                                 self_cache, impl=attn_impl,
+                                                 window=window)
+            new_cache = {"self": new_self} if kind == "decoder" else new_self
+        else:  # decode
+            y, new_self = attn.decode_attention(p["attn"], h, cfg, self_cache,
+                                                pos, window=window)
+            new_cache = {"self": new_self} if kind == "decoder" else new_self
+    elif kind == "ssm":
+        if mode == "train":
+            y = ssm_mod.ssm_apply(p["ssm"], h, cfg, unroll_chunks=unroll_chunks)
+        elif mode == "prefill":
+            y, new_cache = _ssm_prefill(p["ssm"], h, cfg, unroll_chunks)
+        else:
+            y, new_cache = ssm_mod.ssm_decode_step(p["ssm"], h, cfg, cache)
+    elif kind == "rglru":
+        if mode == "train":
+            y = rglru_mod.rglru_block(p["rglru"], h, cfg)
+        elif mode == "prefill":
+            y, new_cache = _rglru_prefill(p["rglru"], h, cfg)
+        else:
+            y, new_cache = rglru_mod.rglru_decode_step(p["rglru"], h, cfg, cache)
+    else:
+        raise ValueError(kind)
+    x = x + y
+
+    if kind == "decoder":
+        h = _norm(p, x, cfg, "norm_cross")
+        if mode == "decode":
+            kv = (cache["cross_k"], cache["cross_v"])
+        else:
+            kv = attn.encode_cross_kv(p["cross"], enc_out, cfg)
+        x = x + attn.cross_attention(p["cross"], h, kv, cfg)
+        if new_cache is not None:
+            new_cache["cross_k"], new_cache["cross_v"] = kv
+
+    if kind == "ssm":
+        return x, new_cache, aux
+
+    h = _norm(p, x, cfg, "norm2")
+    if kind == "attn_moe":
+        y, aux = moe_mod.moe_apply(p["moe"], h, cfg)
+    else:
+        y = mlp_apply(p["mlp"], h)
+    x = x + y
+    x = with_logical(x, ("batch", "seq", None) if mode != "decode"
+                     else ("batch", None, None))
+    return x, new_cache, aux
+
+
+def _ssm_prefill(p, h, cfg, unroll_chunks):
+    """Full-sequence SSM output + final states for the decode hand-off."""
+    s = cfg.ssm
+    b, l, d = h.shape
+    z, x, B, C, dt, A = ssm_mod._project(p, h, cfg)
+    xc = ssm_mod._causal_depthwise_conv(x, p["conv_x"])
+    Bc = ssm_mod._causal_depthwise_conv(B, p["conv_B"])
+    Cc = ssm_mod._causal_depthwise_conv(C, p["conv_C"])
+    nh = s.num_heads(d)
+    xh = xc.reshape(b, l, nh, s.head_dim)
+    from repro.kernels.ssd_scan import ops as ssd_ops
+
+    y, final = ssd_ops.ssd(xh, dt, A, Bc, Cc, min(s.chunk_size, l),
+                           unroll_chunks=unroll_chunks)
+    y = y + xh * p["D"][:, None].astype(xh.dtype)
+    y = y.reshape(b, l, -1)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["wo"]
+    k = s.conv_kernel
+    cache = {"state": final, "conv_x": x[:, -(k - 1):],
+             "conv_B": B[:, -(k - 1):], "conv_C": C[:, -(k - 1):]}
+    return out, cache
+
+
+def _rglru_prefill(p, h, cfg):
+    gate = jax.nn.gelu(h @ p["w_gate"])
+    u = h @ p["w_in"]
+    k = cfg.hybrid.conv_kernel
+    uc = rglru_mod._conv1d(u, p["conv"])
+    a, b = rglru_mod._gates(p, uc)
+    from repro.kernels.lru_scan import ops as lru_ops
+
+    hseq, h_last = lru_ops.lru_scan(a, b)
+    y = gate.astype(jnp.float32) * hseq.astype(jnp.float32)
+    out = y.astype(h.dtype) @ p["w_out"]
+    return out, {"h": h_last, "conv": u[:, -(k - 1):]}
+
+
+# ----------------------------------------------------------------- the stacks
+def stack_specs(cfg: ModelConfig, scan: bool, dtype=jnp.bfloat16) -> Any:
+    kinds = block_kinds(cfg)
+    if scan and uniform_stack(cfg):
+        one = layer_specs(cfg, kinds[0], dtype)
+
+        def add_dim(spec: ParamSpec) -> ParamSpec:
+            return ParamSpec((cfg.num_layers,) + spec.shape,
+                             ("layers",) + spec.axes, spec.dtype, spec.init, spec.scale)
+
+        return jax.tree.map(add_dim, one,
+                            is_leaf=lambda s: isinstance(s, ParamSpec))
+    return [layer_specs(cfg, k, dtype) for k in kinds]
+
+
+def stack_apply(params, x, cfg: ModelConfig, positions, mode: str,
+                caches, pos, attn_impl: str, remat: str = "none",
+                enc_out=None, unroll_chunks: bool = False):
+    """Run the full stack. `params` matches stack_specs' layout (stacked tree
+    for scan, list for unrolled). Returns (x, new_caches, aux_total)."""
+    kinds = block_kinds(cfg)
+    scanned = not isinstance(params, list)
+
+    def wrap(f):
+        if remat == "full" and mode == "train":
+            return jax.checkpoint(f)
+        if remat == "dots" and mode == "train":
+            return jax.checkpoint(
+                f, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+        return f
+
+    if scanned:
+        kind = kinds[0]
+
+        def f(p_l, xc, cache_l):
+            return layer_apply(p_l, xc, cfg, kind, positions, mode, cache_l,
+                               pos, attn_impl, enc_out, unroll_chunks)
+
+        fw = wrap(f)
+
+        if caches is None:
+            def body(carry, p_l):
+                xc, aux = carry
+                xc, _, aux_l = fw(p_l, xc, None)
+                return (xc, aux + aux_l), None
+
+            (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)), params)
+            return x, None, aux
+
+        def body(carry, xs):
+            xc, aux = carry
+            p_l, cache_l = xs
+            xc, new_cache, aux_l = fw(p_l, xc, cache_l)
+            return (xc, aux + aux_l), new_cache
+
+        (x, aux), new_caches = lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (params, caches))
+        return x, new_caches, aux
+
+    # unrolled
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for i, (p_l, kind) in enumerate(zip(params, kinds)):
+        cache_l = None if caches is None else caches[i]
+
+        def f(pp, xx, cc, kk=kind):
+            return layer_apply(pp, xx, cfg, kk, positions, mode, cc, pos,
+                               attn_impl, enc_out, unroll_chunks)
+
+        x, new_cache, aux_l = wrap(f)(p_l, x, cache_l)
+        aux_total = aux_total + aux_l
+        new_caches.append(new_cache)
+    if mode == "train":
+        new_caches = None
+    return x, new_caches, aux_total
+
+
+# ------------------------------------------------------------- cache builders
+def stack_cache_specs(cfg: ModelConfig, batch: int, max_len: int, scan: bool,
+                      dtype=jnp.bfloat16):
+    """ParamSpec tree for the per-layer decode caches (dry-run inputs)."""
+    kinds = block_kinds(cfg)
+
+    def one(kind: str):
+        if kind in ("attn", "attn_moe", "local_attn", "decoder"):
+            w = max_len
+            if kind == "local_attn":
+                w = min(max_len, cfg.hybrid.local_window)
+            elif cfg.sliding_window is not None:
+                w = min(max_len, cfg.sliding_window)
+            c = attn.cache_specs(cfg, batch, w, dtype)
+            if kind == "decoder":
+                hd = cfg.resolved_head_dim
+                enc_seq = cfg.encdec.enc_seq
+                return {
+                    "self": c,
+                    "cross_k": ParamSpec((batch, enc_seq, cfg.num_kv_heads, hd),
+                                         ("batch", None, "act_kv_heads", None),
+                                         dtype, "zeros"),
+                    "cross_v": ParamSpec((batch, enc_seq, cfg.num_kv_heads, hd),
+                                         ("batch", None, "act_kv_heads", None),
+                                         dtype, "zeros"),
+                }
+            return c
+        if kind == "ssm":
+            return ssm_mod.ssm_cache_specs(cfg, batch, dtype)
+        if kind == "rglru":
+            return rglru_mod.rglru_cache_specs(cfg, batch, dtype)
+        raise ValueError(kind)
+
+    if scan and uniform_stack(cfg):
+        base = one(kinds[0])
+
+        def add_dim(spec: ParamSpec) -> ParamSpec:
+            return ParamSpec((cfg.num_layers,) + spec.shape,
+                             ("layers",) + spec.axes, spec.dtype, "zeros")
+
+        return jax.tree.map(add_dim, base,
+                            is_leaf=lambda s: isinstance(s, ParamSpec))
+    return [one(k) for k in kinds]

@@ -1,0 +1,75 @@
+"""Fused linear + cross-entropy with a custom VJP (§Perf cell A, iteration 4).
+
+The naive tail  logits = x @ W; loss = -mean(log_softmax[targets])  autodiffs
+into (a) a saved (b, s, V) f32 log-probability residual, (b) a scatter-add for
+d(take_along_axis) that GSPMD lowers to full-tensor all-reduces (measured
+16.8 GB/chip per all-reduce for llama3-405b train_4k), and (c) f32 dW/dx
+einsums.
+
+This op instead:
+  fwd: logits in f32 (stability), loss from logsumexp + gathered target
+       logit; saves only (x, w, targets, lse) — the (b,s,V) tensor is NOT a
+       residual.
+  bwd: recomputes logits once, forms  dlogits = (softmax - onehot) * g / N
+       ELEMENTWISE (iota == targets comparison — no scatter), casts to bf16
+       (dlogits is in [-1, 1]; standard production practice), and constrains
+       dx / dW to the activation/parameter shardings so the partials
+       reduce-scatter instead of all-reducing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import with_logical
+
+
+@jax.custom_vjp
+def linear_xent(x: jax.Array, w: jax.Array, targets: jax.Array) -> jax.Array:
+    """x: (b, s, d) activations; w: (d, V); targets: (b, s) int32.
+    Returns mean cross-entropy over all positions."""
+    loss, _ = _fwd(x, w, targets)
+    return loss
+
+
+def _logits(x, w):
+    return jnp.einsum("bsd,dv->bsv", x, w,
+                      preferred_element_type=jnp.float32)
+
+
+def _fwd(x, w, targets):
+    logits = _logits(x, w)
+    logits = with_logical(logits, ("batch", "seq", "vocab"))
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)            # (b, s)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - ll)
+    return loss, (x, w, targets, lse)
+
+
+def _bwd(res, g):
+    x, w, targets, lse = res
+    b, s = targets.shape
+    n = b * s
+    logits = _logits(x, w)                                        # recompute
+    logits = with_logical(logits, ("batch", "seq", "vocab"))
+    p = jnp.exp(logits - lse[..., None])
+    iota = jax.lax.broadcasted_iota(jnp.int32, p.shape, 2)
+    dlogits = jnp.where(iota == targets[..., None], p - 1.0, p)
+    dlogits = (dlogits * (g / n)).astype(x.dtype)                 # bf16 cotangent
+    dlogits = with_logical(dlogits, ("batch", "seq", "vocab"))
+    dx = jnp.einsum("bsv,dv->bsd", dlogits, w)
+    dx = with_logical(dx, ("batch", "seq", None))
+    dw = jnp.einsum("bsd,bsv->dv", x, dlogits)
+    dw = with_logical(dw.astype(w.dtype), ("embed", "vocab"))
+    return dx, dw, None
+
+
+linear_xent.defvjp(_fwd, _bwd)
+
+
+def xent_ref(x, w, targets):
+    """Naive reference (the old train_loss tail) — test oracle."""
+    logits = jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)

@@ -1,0 +1,13 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import warmup_cosine
+from repro.optim.compression import int8_compress, int8_decompress, ef_compress_update
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "warmup_cosine",
+    "int8_compress",
+    "int8_decompress",
+    "ef_compress_update",
+]

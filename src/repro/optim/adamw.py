@@ -1,0 +1,91 @@
+"""AdamW in pure JAX with ZeRO-sharded states.
+
+Optimizer moments are created with the SAME sharding as their parameters
+(which the launcher shards over (pod, data) x model), so m/v are automatically
+ZeRO-3 partitioned — the optimizer itself contains no collectives; gradient
+reduction happens in the train step (GSPMD FSDP or core.overlap schedules).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params: PyTree, moment_dtype=jnp.float32) -> PyTree:
+    """moment_dtype=bfloat16 halves optimizer HBM (used by llama3-405b on the
+    256-chip mesh, where fp32 moments alone would exceed v5e HBM — DESIGN §4)."""
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads: PyTree, state: PyTree, params: PyTree,
+                 cfg: AdamWConfig, lr: jax.Array,
+                 chunk_leading: int = 0) -> Tuple[PyTree, PyTree, jax.Array]:
+    """Returns (new_params, new_state, grad_norm). lr is the scheduled value.
+
+    chunk_leading > 0: leaves whose leading dim equals it (the scanned layer
+    stacks) are updated one slice at a time via lax.map — the HDOT subdomain
+    discipline applied to the optimizer phase. Bounds the f32 intermediate
+    working set to one layer's worth instead of the whole stacked tensor
+    (measured: 106 -> ~30 GB/chip peak for llama3-405b train, EXPERIMENTS §Perf).
+    """
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+    step = state["step"] + 1
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        mdt = m.dtype  # preserve moment dtype (may be bf16, see adamw_init)
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m.astype(mdt), v.astype(mdt))
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_p = jax.tree.leaves(params)
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        if chunk_leading and p.ndim >= 2 and p.shape[0] == chunk_leading:
+            pp, mm, vv = jax.lax.map(lambda args: upd(*args), (g, m, v, p))
+        else:
+            pp, mm, vv = upd(g, m, v, p)
+        new_p.append(pp)
+        new_m.append(mm)
+        new_v.append(vv)
+    return (jax.tree.unflatten(treedef, new_p),
+            {"m": jax.tree.unflatten(treedef, new_m),
+             "v": jax.tree.unflatten(treedef, new_v),
+             "step": step},
+            gnorm)

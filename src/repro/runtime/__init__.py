@@ -1,0 +1,5 @@
+from repro.runtime.trainer import Trainer
+from repro.runtime.server import BatchServer
+from repro.runtime.ft import FaultTolerantRunner
+
+__all__ = ["Trainer", "BatchServer", "FaultTolerantRunner"]

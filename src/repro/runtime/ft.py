@@ -1,0 +1,68 @@
+"""Fault-tolerance controller: restart-on-failure, elastic re-mesh, and
+straggler-absorbing data reassignment.
+
+The paper's load-balancing argument (tasks absorb imbalance) becomes, at
+cluster scale, *restartability*: a failed step must be retryable without
+losing more than `checkpoint_every` steps, and a lost pod must be absorbable
+by re-meshing. Both paths reduce to "restore the latest atomic checkpoint and
+continue from its data step" — possible because the data pipeline is a pure
+function of the step index.
+"""
+from __future__ import annotations
+
+import logging
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.runtime.trainer import Trainer
+
+log = logging.getLogger(__name__)
+
+
+def reassign_host_shards(num_hosts: int, failed: Sequence[int]
+                         ) -> Dict[int, List[int]]:
+    """Straggler/failure mitigation at the data level: the batch slices owned
+    by failed (or persistently slow) hosts are redistributed round-robin over
+    the survivors — the HDOT over-decomposition of the batch axis is what
+    makes the slices reassignable without any data movement (each host can
+    materialize ANY slice from the step index alone, data/pipeline.py).
+
+    Returns {surviving_host: [host_slice_ids it now serves]}."""
+    failed_set = set(failed)
+    survivors = [h for h in range(num_hosts) if h not in failed_set]
+    if not survivors:
+        raise RuntimeError("no surviving hosts")
+    out: Dict[int, List[int]] = {h: [h] for h in survivors}
+    for i, lost in enumerate(sorted(failed_set)):
+        out[survivors[i % len(survivors)]].append(lost)
+    return out
+
+
+class FaultTolerantRunner:
+    def __init__(self, trainer_factory: Callable[[], Trainer],
+                 max_restarts: int = 3):
+        self.trainer_factory = trainer_factory
+        self.max_restarts = max_restarts
+        self.restarts = 0
+
+    def run(self, total_steps: int,
+            failure_hook: Optional[Callable[[int], None]] = None) -> Trainer:
+        """Run to `total_steps`, restarting from the latest checkpoint on any
+        exception (up to max_restarts). Returns the final trainer."""
+        trainer = self.trainer_factory()
+        while True:
+            try:
+                if trainer.params is None:
+                    trainer.restore_if_available()
+                remaining = total_steps - trainer.step
+                if remaining <= 0:
+                    return trainer
+                trainer.train(remaining, failure_hook=failure_hook)
+                return trainer
+            except Exception as e:  # noqa: BLE001 - controller must catch all
+                self.restarts += 1
+                log.warning("step failed (%s); restart %d/%d",
+                            e, self.restarts, self.max_restarts)
+                if self.restarts > self.max_restarts:
+                    raise
+                # fresh trainer: re-reads the latest atomic checkpoint
+                trainer = self.trainer_factory()

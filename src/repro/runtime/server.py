@@ -1,0 +1,100 @@
+"""Batched serving runtime: prefill + iterative decode over slot-batched
+caches (wave-scheduled continuous batching).
+
+Requests are padded into fixed `slots`; a wave = one prefill of all waiting
+prompts + a decode loop until every slot finishes (EOS or max_new_tokens).
+Slot-level cache surgery (true token-granular continuous batching) drops into
+the same cache layout — the wave scheduler is the simplest policy that keeps
+the decode step shape static for XLA.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import LanguageModel
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    output: Optional[List[int]] = None
+
+
+class BatchServer:
+    def __init__(self, model: LanguageModel, params: PyTree, slots: int = 8,
+                 max_len: int = 1024, greedy: bool = True, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.key = jax.random.PRNGKey(seed)
+        self.queue: List[Request] = []
+        # cache capacity must cover prompt + generation, else generated
+        # tokens evict the prompt from the ring (model.prefill docstring)
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, max_len=self.max_len))
+        self._decode = jax.jit(model.decode_step)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _pad_prompts(self, reqs: List[Request]) -> np.ndarray:
+        lens = [len(r.prompt) for r in reqs]
+        width = max(lens)
+        toks = np.zeros((len(reqs), width), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, width - len(r.prompt):] = r.prompt  # left-pad
+        return toks
+
+    def run_wave(self) -> List[Request]:
+        """Serve up to `slots` queued requests to completion."""
+        if not self.queue:
+            return []
+        reqs, self.queue = self.queue[:self.slots], self.queue[self.slots:]
+        toks = self._pad_prompts(reqs)
+        b, plen = toks.shape
+        logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        max_new = max(r.max_new_tokens for r in reqs)
+        outputs = [[] for _ in reqs]
+        done = np.zeros(b, bool)
+        token = self._sample(logits)
+        pos = plen
+        for _ in range(max_new):
+            for i, r in enumerate(reqs):
+                t = int(token[i, 0])
+                if not done[i]:
+                    outputs[i].append(t)
+                    if (r.eos_id is not None and t == r.eos_id) or \
+                            len(outputs[i]) >= r.max_new_tokens:
+                        done[i] = True
+            if done.all():
+                break
+            logits, caches = self._decode(self.params, token, caches,
+                                          jnp.asarray(pos, jnp.int32))
+            token = self._sample(logits)
+            pos += 1
+        for r, out in zip(reqs, outputs):
+            r.output = out
+        return reqs
+
+    def run_all(self) -> List[Request]:
+        served: List[Request] = []
+        while self.queue:
+            served.extend(self.run_wave())
+        return served
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.greedy:
+            return jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        self.key, k = jax.random.split(self.key)
+        return jax.random.categorical(k, logits[:, -1, :])[:, None].astype(jnp.int32)

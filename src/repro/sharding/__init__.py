@@ -1,0 +1,17 @@
+from repro.sharding.rules import (
+    DEFAULT_RULES,
+    ShardingContext,
+    current_context,
+    resolve_pspec,
+    use_sharding,
+    with_logical,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "ShardingContext",
+    "current_context",
+    "resolve_pspec",
+    "use_sharding",
+    "with_logical",
+]

@@ -1,0 +1,211 @@
+"""Logical-axis sharding rules with divisibility fixups.
+
+Model code annotates tensors with LOGICAL axis names ("batch", "seq", "heads",
+...). The launcher installs a :class:`ShardingContext` that maps logical names
+to mesh axes. Resolution is *ordered and greedy with fixups*:
+
+- each logical name carries a candidate list (first match wins);
+- a candidate is accepted only if (a) none of its mesh axes were already used
+  by an earlier dim of the same tensor and (b) the dim size is divisible by
+  the product of the candidate's mesh axis sizes;
+- otherwise the next candidate (ultimately `None` = replicate) is used.
+
+This is what lets ONE rule set drive 10 architectures x 4 shapes x 2 meshes:
+e.g. "heads->model" applies to llama3 (128/16) but silently degrades to
+replicated for llava (56 heads), and "experts->model" applies to qwen3-moe
+(128 experts) while mixtral (8 experts) falls through to TP over expert_mlp.
+Every fixup is observable via `explain_pspec` and recorded by the dry-run.
+
+Outside an installed context every helper is the identity, so model code runs
+unchanged in single-device CPU tests.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Optional[Tuple[str, ...]]          # one candidate: mesh axes for a dim
+Candidates = Sequence[MeshAxes]               # ordered candidates per logical axis
+
+# --------------------------------------------------------------- default rules
+# weight + activation logical axes. ("pod","data") collapses to the axes that
+# exist in the mesh (single-pod meshes have no "pod").
+DEFAULT_RULES: Dict[str, Candidates] = {
+    # activations
+    "batch": [("pod", "data"), ("data",), None],
+    "seq": [("model",), None],          # sequence parallelism between blocks
+    "kv_seq": [("model",), None],       # decode KV cache length (flash-decode split)
+    "act_embed": [None],
+    "act_heads": [("model",), None],
+    "act_kv_heads": [("model",), None],
+    # weights
+    "embed": [("pod", "data"), ("data",), None],   # FSDP dim
+    "mlp": [("model",), None],
+    "heads": [("model",), None],
+    "kv_heads": [("model",), None],
+    "head_dim": [None],
+    "vocab": [("model",), None],
+    "experts": [("model",), None],
+    "expert_mlp": [("model",), None],
+    "lru": [("model",), None],
+    "state": [None],
+    "conv": [None],
+    "layers": [None],                   # scanned-layer leading dim
+    None: [None],
+}
+
+
+# Serving (decode) recipe: weights fully TP over (model x data) — decode
+# re-gathers FSDP weights EVERY token otherwise (measured 13.8 MB/chip/layer
+# on granite decode_32k, EXPERIMENTS §Perf cell C it.2). Batch rides only the
+# pod axis (activations are tiny at decode); the KV cache seq-shards over
+# (model, data) and flash-decode combines partial softmaxes across both.
+SERVE_RULES: Dict[str, Candidates] = dict(DEFAULT_RULES)
+SERVE_RULES.update({
+    "batch": [("pod",), None],
+    "seq": [None],
+    "kv_seq": [("model", "data"), ("model",), None],
+    "act_heads": [("model",), None],
+    "act_kv_heads": [None],
+    "embed": [("data",), None],
+    "mlp": [("model", "data"), ("model",), None],
+    "heads": [("model", "data"), ("model",), None],
+    "kv_heads": [("model",), None],
+    "head_dim": [("data",), None],
+    "vocab": [("model", "data"), ("model",), None],
+    "experts": [("model", "data"), ("model",), None],
+    "expert_mlp": [("model", "data"), ("model",), None],
+    "lru": [("model", "data"), ("model",), None],
+})
+
+
+# DP x SP recipe for small-d_model archs (§Perf global iteration): activations
+# shard (batch x seq); heads/kv REPLICATE so attention partial-sums vanish and
+# the only per-layer traffic is the FSDP weight gather (~3 x layer bytes) plus
+# the tiny full-seq k/v gather. Head-TP (DEFAULT_RULES) only pays off when
+# layer weights outweigh the (b_loc, s, d) activation slabs — measured
+# crossover ~d_model 6k at batch 256/mesh 256 (EXPERIMENTS §Perf).
+TRAIN_DP_RULES: Dict[str, Candidates] = dict(DEFAULT_RULES)
+TRAIN_DP_RULES.update({
+    "act_heads": [None],
+    "act_kv_heads": [None],
+})
+
+def rules_for(kind: str, d_model: int = 0, family: str = "") -> Dict[str, Candidates]:
+    """Sharding recipe per cell kind (train/prefill amortize weight gathers
+    over many tokens -> FSDP; decode cannot -> full TP).
+
+    NOTE: TRAIN_DP_RULES was hypothesized to beat head-TP for small d_model
+    (weight gathers ~3x layer bytes << activation slabs) but MEASURED 1.4x
+    WORSE on internlm2 train_4k (406 vs 283 GB/chip) and 2x the temp memory:
+    the backward of the replicated k/v gather is a full-seq gradient
+    reduction per layer, and replicated-head score tensors blow the remat
+    working set. Refuted; kept for the record (EXPERIMENTS §Perf)."""
+    if kind == "decode":
+        return dict(SERVE_RULES)
+    return dict(DEFAULT_RULES)
+
+
+@dataclass
+class ShardingContext:
+    mesh: Mesh
+    rules: Dict[str, Candidates] = field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    def axis_size(self, name: str) -> int:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape)).get(name, 1)
+
+
+_LOCAL = threading.local()
+
+
+def current_context() -> Optional[ShardingContext]:
+    return getattr(_LOCAL, "ctx", None)
+
+
+class use_sharding:
+    """Context manager installing mesh+rules for logical resolution."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[Dict[str, Candidates]] = None):
+        merged = dict(DEFAULT_RULES)
+        if rules:
+            merged.update(rules)
+        self.ctx = ShardingContext(mesh, merged)
+
+    def __enter__(self) -> ShardingContext:
+        self._prev = current_context()
+        _LOCAL.ctx = self.ctx
+        return self.ctx
+
+    def __exit__(self, *exc):
+        _LOCAL.ctx = self._prev
+        return False
+
+
+def _mesh_axes_present(ctx: ShardingContext, cand: MeshAxes) -> MeshAxes:
+    if cand is None:
+        return None
+    present = tuple(a for a in cand if a in ctx.mesh.axis_names)
+    return present or None
+
+
+def resolve_pspec(shape: Sequence[int], axes: Sequence[Optional[str]],
+                  ctx: Optional[ShardingContext] = None) -> P:
+    """Resolve logical axes -> PartitionSpec for a concrete shape (see module
+    docstring for the fixup policy)."""
+    ctx = ctx or current_context()
+    if ctx is None:
+        return P()
+    assert len(shape) == len(axes), (shape, axes)
+    used: set = set()
+    out: List[Union[None, str, Tuple[str, ...]]] = []
+    for dim, name in zip(shape, axes):
+        placed: MeshAxes = None
+        for cand in ctx.rules.get(name, [None]):
+            cand = _mesh_axes_present(ctx, cand)
+            if cand is None:
+                placed = None
+                break
+            if any(a in used for a in cand):
+                continue
+            prod = 1
+            for a in cand:
+                prod *= ctx.axis_size(a)
+            if prod <= 1 or dim % prod != 0:
+                continue
+            placed = cand
+            break
+        if placed is None:
+            out.append(None)
+        else:
+            used.update(placed)
+            out.append(placed if len(placed) > 1 else placed[0])
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def explain_pspec(shape: Sequence[int], axes: Sequence[Optional[str]],
+                  ctx: Optional[ShardingContext] = None) -> str:
+    spec = resolve_pspec(shape, axes, ctx)
+    return f"{tuple(shape)} {tuple(axes)} -> {spec}"
+
+
+def with_logical(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Sharding constraint by logical axes; identity outside a context."""
+    ctx = current_context()
+    if ctx is None:
+        return x
+    spec = resolve_pspec(x.shape, axes, ctx)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def named_sharding(shape: Sequence[int], axes: Sequence[Optional[str]],
+                   ctx: Optional[ShardingContext] = None) -> Optional[NamedSharding]:
+    ctx = ctx or current_context()
+    if ctx is None:
+        return None
+    return NamedSharding(ctx.mesh, resolve_pspec(shape, axes, ctx))

@@ -1,0 +1,34 @@
+"""Shared fixtures. Tests run on exactly ONE CPU device — device-count forcing
+is reserved for the dry-run and the benchmark subprocess workers."""
+from __future__ import annotations
+
+import os
+
+# Guard: if a stray XLA_FLAGS leaked in, tests would silently exercise the
+# wrong configuration.
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
+    "tests must run with the default single CPU device"
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def single_mesh():
+    """1-device mesh carrying the production axis names."""
+    from repro.launch.mesh import make_single_device_mesh
+
+    return make_single_device_mesh()
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def reduced(arch_id: str):
+    from repro.config.registry import get_arch
+
+    return get_arch(arch_id).reduced()

@@ -1,0 +1,114 @@
+"""Attention implementations are interchangeable: dense == blockwise ==
+blockwise_unrolled == flash(interpret); decode ring-cache equals the dense
+reference; SWA masks; GQA head mapping."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.registry import get_arch
+from repro.models import attention as attn
+from repro.models.model import ModelOptions, build_model
+
+
+def _qkv(b=2, s=128, hq=4, hkv=2, d=32):
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (b, s, hq, d), jnp.float32)
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(k, 2), (b, s, hkv, d), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return q, kk, v, pos
+
+
+@pytest.mark.parametrize("window", [None, 32])
+@pytest.mark.parametrize("impl", ["blockwise", "blockwise_unrolled", "flash"])
+def test_sdpa_impls_match_dense(impl, window):
+    q, k, v, pos = _qkv()
+    want = attn.sdpa(q, k, v, pos, pos, causal=True, window=window,
+                     impl="dense")
+    got = attn.sdpa(q, k, v, pos, pos, causal=True, window=window,
+                    impl=impl, chunk=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_swa_masks_distant_tokens():
+    """With window w, logits for a query must not depend on keys further than
+    w-1 back — perturb a distant key and assert invariance."""
+    q, k, v, pos = _qkv(b=1, s=64)
+    w = 16
+    out1 = attn.sdpa(q, k, v, pos, pos, causal=True, window=w, impl="dense")
+    k2 = k.at[:, 10].add(100.0)   # token 10 is > w away from query 63
+    v2 = v.at[:, 10].add(100.0)
+    out2 = attn.sdpa(q, k2, v2, pos, pos, causal=True, window=w, impl="dense")
+    np.testing.assert_allclose(np.asarray(out1[:, 40:]),
+                               np.asarray(out2[:, 40:]), rtol=1e-5, atol=1e-5)
+    assert not np.allclose(np.asarray(out1[:, 10:12]),
+                           np.asarray(out2[:, 10:12]))
+
+
+def test_decode_ring_cache_equals_dense():
+    """Feeding tokens one-by-one through decode_attention must equal the full
+    dense causal attention at every step (ring buffer, absolute positions)."""
+    cfg = dataclasses.replace(get_arch("qwen3-8b").reduced(), num_layers=1)
+    p = {}
+    from repro.models.layers import init_from_specs
+
+    specs = attn.attention_specs(cfg, jnp.float32)
+    p = init_from_specs(specs, jax.random.PRNGKey(0))
+    b, s = 1, 24
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model),
+                          jnp.float32) * 0.1
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    want = attn.self_attention(p, x, cfg, pos, causal=True, impl="dense")
+    cache = attn.make_cache(cfg, b, s, jnp.float32)
+    got = []
+    for t in range(s):
+        y, cache = attn.decode_attention(p, x[:, t:t + 1], cfg, cache,
+                                         jnp.asarray(t, jnp.int32))
+        got.append(y)
+    got = jnp.concatenate(got, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_decode_swa_ring_wraparound():
+    """SWA cache sized to the window: after wrapping, old tokens must be
+    evicted (same result as dense attention with the window mask)."""
+    cfg = dataclasses.replace(get_arch("mixtral-8x7b").reduced(), num_layers=1)
+    w = cfg.sliding_window      # reduced: 64
+    from repro.models.layers import init_from_specs
+
+    p = init_from_specs(attn.attention_specs(cfg, jnp.float32),
+                        jax.random.PRNGKey(0))
+    b, s = 1, 96                # > window so the ring wraps
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model),
+                          jnp.float32) * 0.1
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    want = attn.self_attention(p, x, cfg, pos, causal=True, impl="dense",
+                               window=w)
+    cache = attn.make_cache(cfg, b, w, jnp.float32)
+    outs = []
+    for t in range(s):
+        y, cache = attn.decode_attention(p, x[:, t:t + 1], cfg, cache,
+                                         jnp.asarray(t, jnp.int32), window=w)
+        outs.append(y)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got[:, -8:]),
+                               np.asarray(want[:, -8:]), rtol=2e-3, atol=2e-3)
+
+
+def test_gqa_equals_repeated_mha():
+    """GQA with hkv groups must equal MHA with the kv heads explicitly
+    repeated."""
+    q, k, v, pos = _qkv(hq=8, hkv=2)
+    got = attn.sdpa(q, k, v, pos, pos, impl="dense")
+    k_rep = jnp.repeat(k, 4, axis=2)
+    v_rep = jnp.repeat(v, 4, axis=2)
+    want = attn.sdpa(q, k_rep, v_rep, pos, pos, impl="dense")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

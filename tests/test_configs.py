@@ -1,0 +1,61 @@
+"""The 10 assigned architecture configs, frozen against the assignment spec."""
+from __future__ import annotations
+
+import pytest
+
+from repro.config.registry import get_arch, list_archs
+
+SPEC = {
+    "mixtral-8x7b": dict(L=32, d=4096, H=32, kv=8, V=32000, moe=(8, 2, 14336),
+                         swa=True),
+    "qwen3-moe-30b-a3b": dict(L=48, d=2048, H=32, kv=4, V=151936,
+                              moe=(128, 8, 768)),
+    "qwen3-8b": dict(L=36, d=4096, H=32, kv=8, ff=12288, V=151936, qk=True),
+    "internlm2-1.8b": dict(L=24, d=2048, H=16, kv=8, ff=8192, V=92544),
+    "llama3-405b": dict(L=126, d=16384, H=128, kv=8, ff=53248, V=128256),
+    "granite-3-2b": dict(L=40, d=2048, H=32, kv=8, ff=8192, V=49155),
+    "llava-next-34b": dict(L=60, d=7168, H=56, kv=8, ff=20480, V=64000),
+    "mamba2-780m": dict(L=48, d=1536, V=50280, ssm=128),
+    "whisper-base": dict(L=6, d=512, H=8, kv=8, ff=2048, V=51865),
+    "recurrentgemma-2b": dict(L=26, d=2560, H=10, kv=1, ff=7680, V=256000),
+}
+
+
+def test_registry_covers_all_assigned():
+    assert sorted(list_archs()) == sorted(SPEC)
+
+
+@pytest.mark.parametrize("arch", sorted(SPEC))
+def test_config_matches_assignment(arch):
+    s, c = SPEC[arch], get_arch(arch)
+    assert c.num_layers == s["L"]
+    assert c.d_model == s["d"]
+    assert c.vocab_size == s["V"]
+    if "H" in s:
+        assert (c.num_heads, c.num_kv_heads) == (s["H"], s["kv"])
+    if "ff" in s:
+        assert c.d_ff == s["ff"]
+    if "moe" in s:
+        assert (c.moe.num_experts, c.moe.top_k, c.moe.d_ff_expert) == s["moe"]
+    if s.get("swa"):
+        assert c.sliding_window == 4096
+    if s.get("qk"):
+        assert c.qk_norm
+    if "ssm" in s:
+        assert c.ssm.state_dim == s["ssm"]
+        assert c.family == "ssm"
+
+
+def test_subquadratic_flags():
+    """long_500k runs exactly for SWA / SSM / hybrid archs."""
+    runnable = {a for a in SPEC if get_arch(a).subquadratic}
+    assert runnable == {"mixtral-8x7b", "mamba2-780m", "recurrentgemma-2b"}
+
+
+def test_reduced_configs_stay_in_family():
+    for a in SPEC:
+        c, r = get_arch(a), get_arch(a).reduced()
+        assert r.family == c.family
+        assert (r.moe is None) == (c.moe is None)
+        assert (r.ssm is None) == (c.ssm is None)
+        assert r.num_params() < c.num_params()

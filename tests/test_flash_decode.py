@@ -1,0 +1,71 @@
+"""Sharded flash-decode vs the single-device dense oracle (subprocess with a
+real multi-device mesh — the §Perf cell-C optimization's correctness proof)."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def run_devices(code: str, devices: int, timeout: int = 600) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("window", [None, 32])
+def test_flash_decode_matches_dense_oracle(window):
+    code = f"""
+    import json, dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.config.registry import get_arch
+    from repro.models import attention as attn
+    from repro.models.layers import init_from_specs
+    from repro.launch.mesh import make_mesh
+    from repro.sharding.rules import use_sharding
+
+    window = {window!r}
+    cfg = dataclasses.replace(get_arch("qwen3-8b").reduced(), num_layers=1)
+    p = init_from_specs(attn.attention_specs(cfg, jnp.float32),
+                        jax.random.PRNGKey(0))
+    mesh = make_mesh((2, 4), ("data", "model"))
+    b, w = 4, 64
+    x_seq = jax.random.normal(jax.random.PRNGKey(1), (b, 48, cfg.d_model),
+                              jnp.float32) * 0.1
+
+    def run(sharded):
+        cache = attn.make_cache(cfg, b, w, jnp.float32)
+        outs = []
+        for t in range(x_seq.shape[1]):
+            def step(x1, cache, t=t):
+                if sharded:
+                    with use_sharding(mesh):
+                        return attn.decode_attention(
+                            p, x1, cfg, cache, jnp.asarray(t, jnp.int32),
+                            window=window)
+                return attn.decode_attention(
+                    p, x1, cfg, cache, jnp.asarray(t, jnp.int32),
+                    window=window)
+            y, cache = jax.jit(step)(x_seq[:, t:t+1], cache)
+            outs.append(np.asarray(y))
+        return np.concatenate(outs, axis=1)
+
+    dense = run(sharded=False)
+    flash = run(sharded=True)
+    err = float(np.max(np.abs(dense - flash)))
+    print(json.dumps({{"max_err": err}}))
+    """
+    r = run_devices(code, 8)
+    assert r["max_err"] < 2e-4, r

@@ -1,0 +1,125 @@
+"""Per-arch smoke tests (REQUIRED by the brief): every assigned architecture
+instantiates a REDUCED same-family config and runs one forward/train step on
+CPU, asserting output shapes and no NaNs. Plus prefill/decode consistency."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.registry import get_arch, list_archs
+from repro.models.model import ModelOptions, build_model
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, b=2, s=64):
+    batch = {"tokens": jnp.maximum(jnp.arange(b * s, dtype=jnp.int32)
+                                   .reshape(b, s) % cfg.vocab_size, 1),
+             "targets": jnp.zeros((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.ones((b, cfg.num_vision_patches, cfg.d_model),
+                                    jnp.bfloat16) * 0.02
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.ones((b, cfg.encdec.enc_seq, cfg.d_model),
+                                   jnp.bfloat16) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    """Reduced config: one loss+grad step; finite loss, finite grads."""
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg, ModelOptions(attn_impl="dense"))
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    loss, grads = jax.jit(jax.value_and_grad(model.train_loss))(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    leaves = jax.tree.leaves(grads)
+    assert leaves and all(np.isfinite(np.asarray(l, np.float32)).all()
+                          for l in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_shapes(arch):
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg, ModelOptions(attn_impl="dense"))
+    params = model.init(jax.random.PRNGKey(0))
+    b, cache_len = 2, 128
+    caches = model.init_caches(b, cache_len)
+    token = jnp.ones((b, 1), jnp.int32)
+    logits, new_caches = jax.jit(model.decode_step)(
+        params, token, caches, jnp.asarray(5, jnp.int32))
+    assert logits.shape == (b, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert jax.tree.structure(new_caches) == jax.tree.structure(caches)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "mixtral-8x7b", "mamba2-780m",
+                                  "recurrentgemma-2b"])
+def test_prefill_decode_matches_full_forward(arch):
+    """Teacher-forcing consistency: prefill(t[:n]) then decode(t[n]) must give
+    the same final logits as prefill(t[:n+1]) — the cache IS the state."""
+    import dataclasses
+
+    cfg = get_arch(arch).reduced()
+    if cfg.moe is not None:
+        # capacity-based token dropping differs between S=n and S=n+1
+        # prefills (different capacity ceil) — that is an orthogonal MoE
+        # semantic; the cache hand-off is validated drop-free.
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         capacity_factor=float(cfg.moe.num_experts)))
+    model = build_model(cfg, ModelOptions(attn_impl="dense"))
+    params = model.init(jax.random.PRNGKey(0))
+    b, n = 1, 33
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, n + 1), 1,
+                              cfg.vocab_size)
+    logits_full, _ = model.prefill(params, {"tokens": toks})
+    # prefill the prefix into a cache with headroom for the decode step
+    _, caches = model.prefill(params, {"tokens": toks[:, :n]}, max_len=n + 1)
+    logits_inc, _ = model.decode_step(params, toks[:, n:n + 1], caches,
+                                      jnp.asarray(n, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(logits_full[:, -1], np.float32),
+        np.asarray(logits_inc[:, -1], np.float32), rtol=3e-2, atol=6e-2)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "mamba2-780m"])
+def test_scan_equals_unrolled(arch):
+    """Scanned and unrolled stacks are the same function."""
+    cfg = get_arch(arch).reduced()
+    m_scan = build_model(cfg, ModelOptions(attn_impl="dense", scan_layers=True))
+    m_unrl = build_model(cfg, ModelOptions(attn_impl="dense", scan_layers=False))
+    p_scan = m_scan.init(jax.random.PRNGKey(0))
+    # re-layout scanned params (stacked leaves) into the unrolled list form
+    stacked = p_scan["layers"]
+    unrolled = [jax.tree.map(lambda x, i=i: x[i], stacked)
+                for i in range(cfg.num_layers)]
+    p_unrl = dict(p_scan)
+    p_unrl["layers"] = unrolled
+    batch = _batch(cfg)
+    l1 = m_scan.train_loss(p_scan, batch)
+    l2 = m_unrl.train_loss(p_unrl, batch)
+    # scan and unrolled fuse differently -> bf16 reassociation noise only
+    np.testing.assert_allclose(float(l1), float(l2), rtol=5e-3)
+
+
+def test_moe_param_count_matches_hf():
+    """Full configs reproduce published parameter counts (sanity on the exact
+    assigned configs, not the reduced ones)."""
+    assert abs(get_arch("mixtral-8x7b").num_params() / 46.7e9 - 1) < 0.01
+    assert abs(get_arch("qwen3-moe-30b-a3b").num_params() / 30.5e9 - 1) < 0.01
+    assert abs(get_arch("llama3-405b").num_params() / 405.8e9 - 1) < 0.01
+    assert abs(get_arch("qwen3-8b").num_params() / 8.19e9 - 1) < 0.01
+
+
+def test_vlm_patch_prefix_excluded_from_loss():
+    cfg = get_arch("llava-next-34b").reduced()
+    model = build_model(cfg, ModelOptions(attn_impl="dense"))
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    loss = model.train_loss(params, batch)
+    assert np.isfinite(float(loss))

@@ -1,0 +1,31 @@
+"""The training driver end-to-end for EVERY assigned arch (reduced configs,
+2 steps) — locks in the frontend-stub augmentation and per-arch checkpoint
+namespacing."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.config.registry import list_archs
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", list_archs())
+def test_driver_two_steps_every_arch(arch, tmp_path):
+    from repro.launch.train import build_run
+    from repro.runtime.trainer import Trainer
+
+    run = build_run(arch, reduced=True, steps=2, global_batch=2, seq_len=32,
+                    checkpoint_dir=str(tmp_path))
+    t = Trainer(run)
+    t.train(2)
+    assert len(t.metrics_log) == 2
+    assert np.isfinite(t.metrics_log[-1]["loss"])
+
+
+def test_checkpoint_dirs_namespaced(tmp_path):
+    from repro.launch.train import build_run
+
+    r1 = build_run("whisper-base", checkpoint_dir=str(tmp_path))
+    r2 = build_run("mamba2-780m", checkpoint_dir=str(tmp_path))
+    assert r1.train.checkpoint_dir != r2.train.checkpoint_dir
