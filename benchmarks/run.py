@@ -9,16 +9,22 @@
 
 Results land in results/bench/*.json + a markdown summary. Run:
   PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
+
+--quick additionally writes BENCH_quick.json at the repo root: one
+consolidated record (per suite: ops/s for both schedules + the
+hdot/two_phase ratio) that is COMMITTED, so the overlap delta is a tracked
+trajectory across PRs instead of a one-off print.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 import traceback
 
 from benchmarks import (bench_overlap, hpccg, lm_step, table1_halo_memory,
                         table2_heat2d, table4_creams)
-from benchmarks._util import RESULTS, save
+from benchmarks._util import REPO, RESULTS, save
 
 SUITES = {
     "table1_halo_memory": lambda quick: table1_halo_memory.run(),
@@ -39,6 +45,54 @@ SUITES = {
 }
 
 
+# suite -> short key in the consolidated BENCH_quick.json record
+QUICK_KEYS = {"table2_heat2d": "heat2d", "table4_creams": "creams",
+              "hpccg": "hpccg", "bench_overlap": "overlap",
+              "lm_step": "lm_step"}
+
+
+def _schedule_rates(row: dict):
+    """(metric, two_phase_rate, hdot_rate) for a schedule-comparison row, or
+    None. Single source of truth for the per-suite perf key — 'seconds' rows
+    are inverted to a rate so bigger is always better."""
+    if "two_phase" not in row:
+        return None
+    key = next((k for k in ("sweeps_per_s", "steps_per_s", "iters_per_s")
+                if k in row["two_phase"]), None)
+    if key is not None:
+        return key, row["two_phase"][key], row["hdot"][key]
+    return "ops_per_s", 1.0 / row["two_phase"]["seconds"], \
+        1.0 / row["hdot"]["seconds"]
+
+
+def _quick_record(records: dict) -> dict:
+    """Consolidate per-suite results into {suite: rows + summary ratio}.
+    The summary ratio is taken from the largest-device row (where the
+    schedules diverge most)."""
+    out: dict = {}
+    for name, short in QUICK_KEYS.items():
+        rec = records.get(name)
+        if rec is None:
+            continue
+        if "error" in rec:
+            out[short] = {"error": rec["error"]}
+            continue
+        rows = []
+        for r in rec.get("rows", []):
+            rates = _schedule_rates(r)
+            if rates is None:
+                continue
+            key, tp, hd = rates
+            rows.append({"devices": r.get("devices"), "metric": key,
+                         "two_phase": tp, "hdot": hd,
+                         "hdot_two_phase_ratio": hd / tp})
+        entry: dict = {"rows": rows}
+        if rows:
+            entry["hdot_two_phase_ratio"] = rows[-1]["hdot_two_phase_ratio"]
+        out[short] = entry
+    return out
+
+
 def _summary_md(records: dict) -> str:
     lines = ["# Benchmark summary", ""]
     for name, rec in records.items():
@@ -55,17 +109,14 @@ def _summary_md(records: dict) -> str:
                 lines.append(f"| {r['ranks']} | {r['halo_pct']} | "
                              f"{r['paper_pct']} | {r['match']} |")
         elif rows and "two_phase" in rows[0]:
-            key = next(k for k in ("sweeps_per_s", "steps_per_s",
-                                   "iters_per_s", "seconds")
-                       if k in rows[0]["two_phase"])
+            key = _schedule_rates(rows[0])[0]
             lines.append(f"| devices | two_phase {key} | hdot {key} | "
                          "hdot/two_phase |")
             lines.append("|---|---|---|---|")
             for r in rows:
-                tp, hd = r["two_phase"][key], r["hdot"][key]
-                ratio = (hd / tp) if key != "seconds" else (tp / hd)
+                _, tp, hd = _schedule_rates(r)
                 lines.append(f"| {r['devices']} | {tp:.2f} | {hd:.2f} | "
-                             f"{ratio:.2f}x |")
+                             f"{hd / tp:.2f}x |")
         lines.append("")
     return "\n".join(lines)
 
@@ -97,6 +148,11 @@ def main() -> int:
     md = _summary_md(records)
     (RESULTS / "summary.md").write_text(md)
     print(md)
+    if args.quick and not args.only:
+        quick = _quick_record(records)
+        path = REPO / "BENCH_quick.json"
+        path.write_text(json.dumps(quick, indent=1) + "\n")
+        print(f"[bench] wrote {path}")
     return rc
 
 

@@ -1,0 +1,44 @@
+"""Version-compatibility shims for the pinned container toolchain.
+
+The codebase is written against the modern jax surface (`jax.shard_map`,
+``Mesh`` axis types, the ``check_vma=`` kwarg); the container pins jax 0.4.x
+where `shard_map` still lives in ``jax.experimental.shard_map`` with the
+``check_rep=`` spelling and meshes have no axis types. Importing this module
+backfills the gaps in place so every call site can use the modern spelling
+unconditionally. On a new-enough jax this is a no-op.
+
+Imported for its side effect by ``repro.core``/``repro.launch.mesh`` (the
+modules every mesh-touching entry point goes through). Importing it does NOT
+initialize the jax backend — safe before XLA_FLAGS is set.
+"""
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+if not hasattr(lax, "axis_size"):
+    def _axis_size(axis_name):
+        # psum over a literal 1 short-circuits to the (static) axis size
+        return lax.psum(1, axis_name)
+
+    lax.axis_size = _axis_size
+
+def cost_analysis_dict(compiled) -> dict:
+    """`Compiled.cost_analysis()` returns one dict on modern jax but a
+    per-computation LIST of dicts on 0.4.x — normalize to the dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, /, *, mesh, in_specs, out_specs, **kwargs):
+        if "check_vma" in kwargs:  # renamed from check_rep in newer jax
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kwargs)
+
+    jax.shard_map = shard_map

@@ -212,6 +212,9 @@ class ParallelConfig:
     # HDOT over-decomposition degree at task level (chunks per shard);
     # mirrors the paper's "number of subdomains per rank".
     subdomains: int = 4
+    # gradient-sync buckets for the zero-copy HDOT schedule (subdomains of
+    # the parameter domain; each bucket is one multi-operand all-reduce)
+    grad_buckets: int = 8
     scan_layers: bool = True
     remat: str = "full"                # 'none' | 'full' | 'dots'
     # gradient accumulation microbatches (1 = no accumulation)

@@ -19,6 +19,8 @@ of the reduce order (asserted to ~1e-6 rel in tests).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 from jax import lax
@@ -28,6 +30,19 @@ def _ring_perms(n: int):
     fwd = [(i, (i + 1) % n) for i in range(n)]
     bwd = [(i, (i - 1) % n) for i in range(n)]
     return fwd, bwd
+
+
+def _ring_pieces(s_loc: int, bidirectional: bool, chunks) -> list:
+    """Chunk-granularity knob: the independent ring 'tasks' the local rows
+    are split into, as [(start, stop, backward), ...]. Defaults to 2 pieces
+    (one per direction) for bidirectional rings; even pieces ride the forward
+    ring, odd pieces the backward ring. Pieces may be uneven (odd/prime s_loc
+    still rides both directions); every piece keeps its own static shape."""
+    c = chunks if chunks is not None else (2 if bidirectional else 1)
+    c = max(1, min(c, s_loc)) if s_loc else 1
+    bounds = [(s_loc * i) // c for i in range(c + 1)]
+    return [(a, b, (i % 2 == 1) and bidirectional)
+            for i, (a, b) in enumerate(zip(bounds[:-1], bounds[1:]))]
 
 
 # ------------------------------------------------------------------ two-phase
@@ -43,13 +58,17 @@ def matmul_rs_two_phase(h: jax.Array, v: jax.Array, axis_name: str) -> jax.Array
 
 # ----------------------------------------------------------------------- HDOT
 def ag_matmul_hdot(x: jax.Array, w: jax.Array, axis_name: str,
-                   bidirectional: bool = True) -> jax.Array:
+                   bidirectional: bool = True,
+                   chunks: Optional[int] = None) -> jax.Array:
     """All-gather matmul as a ppermute ring of chunk "tasks".
 
-    Step k computes the row-block owned by rank (idx - k) [resp (idx + k) on
-    the reverse ring] while the next chunk travels. The python loop is
-    unrolled: every chunk matmul is independent of the other chunks' permutes,
-    so the async scheduler overlaps them (HDOT dataflow, not fork-join)."""
+    The local rows are split into `chunks` pieces (default 2 when
+    bidirectional), each circulating its own ring — even pieces forward, odd
+    pieces backward. Step k computes the row-block owned by rank (idx - k)
+    [resp (idx + k) on the reverse ring] while the next piece travels. The
+    python loop is unrolled: every piece matmul is independent of the other
+    pieces' permutes, so the async scheduler overlaps them (HDOT dataflow,
+    not fork-join); opposite directions use both halves of a duplex link."""
     n = lax.axis_size(axis_name)
     if n == 1:
         return x @ w
@@ -58,43 +77,33 @@ def ag_matmul_hdot(x: jax.Array, w: jax.Array, axis_name: str,
     out = jnp.zeros((n * s_loc, w.shape[1]), dtype=jnp.promote_types(x.dtype, w.dtype))
     fwd, bwd = _ring_perms(n)
 
-    if not bidirectional:
-        cur = x
-        for k in range(n):
-            src = (idx - k) % n                      # owner of the chunk we hold
-            out = lax.dynamic_update_slice_in_dim(out, (cur @ w).astype(out.dtype),
-                                                  src * s_loc, axis=0)
-            if k != n - 1:
-                cur = lax.ppermute(cur, axis_name, fwd)
-        return out
-
-    # Bidirectional ring: split the local chunk in two, circulate halves in
-    # opposite directions — halves the ring latency (beyond-paper optimization;
-    # same trick as bidirectional collective matmul on TPU ICI).
-    half = s_loc // 2
-    if half == 0:
-        return ag_matmul_hdot(x, w, axis_name, bidirectional=False)
-    lo, hi = x[:half], x[half:]
-    steps_fwd = (n + 1) // 2 if n % 2 else n // 2
-    cur_lo, cur_hi = lo, hi
+    pieces = _ring_pieces(s_loc, bidirectional, chunks)
+    cur = [x[a:b] for a, b, _ in pieces]
     for k in range(n):
-        src_lo = (idx - k) % n
-        src_hi = (idx + k) % n
-        out = lax.dynamic_update_slice_in_dim(out, (cur_lo @ w).astype(out.dtype),
-                                              src_lo * s_loc, axis=0)
-        out = lax.dynamic_update_slice_in_dim(out, (cur_hi @ w).astype(out.dtype),
-                                              src_hi * s_loc + half, axis=0)
+        for c_i, (a, _, backward) in enumerate(pieces):
+            src = (idx + k) % n if backward else (idx - k) % n
+            out = lax.dynamic_update_slice_in_dim(
+                out, (cur[c_i] @ w).astype(out.dtype),
+                src * s_loc + a, axis=0)
         if k != n - 1:
-            cur_lo = lax.ppermute(cur_lo, axis_name, fwd)
-            cur_hi = lax.ppermute(cur_hi, axis_name, bwd)
-    del steps_fwd
+            cur = [lax.ppermute(p, axis_name, bwd if backward else fwd)
+                   for p, (_, _, backward) in zip(cur, pieces)]
     return out
 
 
-def matmul_rs_hdot(h: jax.Array, v: jax.Array, axis_name: str) -> jax.Array:
-    """Reduce-scatter matmul ring: at step k, rank i adds its contribution for
-    row-block (i - k - 1) mod n to the travelling accumulator. The chunk
-    matmul at step k overlaps the permute of the accumulator from step k-1."""
+def matmul_rs_hdot(h: jax.Array, v: jax.Array, axis_name: str,
+                   bidirectional: bool = True,
+                   chunks: Optional[int] = None) -> jax.Array:
+    """Reduce-scatter matmul as `chunks` concurrent accumulator rings.
+
+    The output rows are split into `chunks` pieces (default 2 when
+    bidirectional); piece c's accumulator rides its own ring — even pieces
+    forward, odd pieces backward — and at step k rank i folds in its
+    contribution for row-block (i -/+ k+1) mod n. Replaces the old single
+    full-width length-n serial accumulator chain: the chains are independent
+    (the scheduler interleaves them and each step's piece matmul overlaps the
+    other pieces' permutes), each hop carries 1/chunks of the bytes, and
+    opposite directions ride both halves of a duplex link."""
     n = lax.axis_size(axis_name)
     if n == 1:
         return h @ v
@@ -102,27 +111,32 @@ def matmul_rs_hdot(h: jax.Array, v: jax.Array, axis_name: str) -> jax.Array:
     s = h.shape[0]
     assert s % n == 0, (s, n)
     s_loc = s // n
-    fwd, _ = _ring_perms(n)
+    fwd, bwd = _ring_perms(n)
 
-    acc = None
+    pieces = _ring_pieces(s_loc, bidirectional, chunks)
+    accs: list = [None] * len(pieces)
     for k in range(n):
-        b = (idx - k - 1) % n
-        h_b = lax.dynamic_slice_in_dim(h, b * s_loc, s_loc, axis=0)
-        part = h_b @ v
-        acc = part if acc is None else lax.ppermute(acc, axis_name, fwd) + part
-    # after n steps rank i holds the full sum for block (i - n) mod n == i...
-    # one more hop aligns block (i-? ) — verify: at k=n-1, b=(i-n)%n = i. OK.
-    return acc
+        for c_i, (a0, a1, backward) in enumerate(pieces):
+            b = (idx + k + 1) % n if backward else (idx - k - 1) % n
+            h_b = lax.dynamic_slice_in_dim(h, b * s_loc + a0, a1 - a0, axis=0)
+            part = h_b @ v
+            accs[c_i] = part if accs[c_i] is None else lax.ppermute(
+                accs[c_i], axis_name, bwd if backward else fwd) + part
+    # at k=n-1 the fwd chain lands on b=(i-n)%n == i and the bwd chain on
+    # b=(i+n)%n == i: every accumulator holds the full sum for rank i's piece.
+    return jnp.concatenate(accs, axis=0)
 
 
 # ---------------------------------------------------------------- dispatchers
-def ag_matmul(x: jax.Array, w: jax.Array, axis_name: str, mode: str = "hdot") -> jax.Array:
+def ag_matmul(x: jax.Array, w: jax.Array, axis_name: str, mode: str = "hdot",
+              chunks: Optional[int] = None) -> jax.Array:
     if mode == "hdot":
-        return ag_matmul_hdot(x, w, axis_name)
+        return ag_matmul_hdot(x, w, axis_name, chunks=chunks)
     return ag_matmul_two_phase(x, w, axis_name)
 
 
-def matmul_rs(h: jax.Array, v: jax.Array, axis_name: str, mode: str = "hdot") -> jax.Array:
+def matmul_rs(h: jax.Array, v: jax.Array, axis_name: str, mode: str = "hdot",
+              chunks: Optional[int] = None) -> jax.Array:
     if mode == "hdot":
-        return matmul_rs_hdot(h, v, axis_name)
+        return matmul_rs_hdot(h, v, axis_name, chunks=chunks)
     return matmul_rs_two_phase(h, v, axis_name)

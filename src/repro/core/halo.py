@@ -13,13 +13,25 @@ Two schedules over the same decomposition:
   the SPMD analogue of OmpSs-2 tasks with fine-grained `inout(subdomain)`
   dependencies plus TAMPI-style asynchronous communication.
 
+The hdot schedule over-decomposes the interior into ``subdomains`` chunk
+tasks, each reading ONLY its slice of the source (plus `width` ghost rows), so
+boundary strips are computed exactly once and the scheduler sees several
+independent interior tasks to hide the exchange behind.
+
+For multi-step solvers, :func:`halo_scan` is a double-buffered driver: the
+halos for step k+1 ride a ppermute issued as soon as step k's boundary strips
+are done — i.e. the exchange for the NEXT step is in flight while the CURRENT
+step's interior chunks compute, removing the per-step comm/compute dependency
+chain entirely (one pipeline-fill exchange at the start is the only exposed
+latency).
+
 All functions run inside ``shard_map`` bodies; `axis_name` names the mesh axis
 that carries the process-level domain decomposition for `dim`.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,9 +45,15 @@ def _edge(u: jax.Array, dim: int, side: str, width: int) -> jax.Array:
     return lax.slice_in_dim(u, n - width, n, axis=dim)
 
 
-def exchange_halo(u: jax.Array, axis_name: str, width: int, dim: int,
-                  periodic: bool = False) -> Tuple[jax.Array, jax.Array]:
-    """Returns (lo_halo, hi_halo): the neighbor edges this shard receives.
+def exchange_edges(lo_edge: jax.Array, hi_edge: jax.Array, axis_name: str,
+                   periodic: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """ppermute pre-sliced edge strips; returns (lo_halo, hi_halo).
+
+    The lo halo is the PREVIOUS rank's hi edge (sent "forward"), the hi halo
+    the NEXT rank's lo edge (sent "backward"). Taking the edges as arguments
+    (instead of slicing internally) lets pipelined callers hand over freshly
+    computed boundary strips, so the ppermute depends only on those strips —
+    not on the assembled block — and can launch while interior tasks run.
 
     Non-periodic edge shards receive zeros (ppermute semantics), matching the
     paper's `isBoundary` gating — the zero halo is masked out by callers that
@@ -44,20 +62,24 @@ def exchange_halo(u: jax.Array, axis_name: str, width: int, dim: int,
     n = lax.axis_size(axis_name)
     if n == 1:
         if periodic:  # wrap around to own edges
-            return _edge(u, dim, "hi", width), _edge(u, dim, "lo", width)
-        z = jnp.zeros_like(_edge(u, dim, "lo", width))
-        return z, z
+            return hi_edge, lo_edge
+        return jnp.zeros_like(hi_edge), jnp.zeros_like(lo_edge)
     if periodic:
         fwd = [(i, (i + 1) % n) for i in range(n)]
         bwd = [(i, (i - 1) % n) for i in range(n)]
     else:
         fwd = [(i, i + 1) for i in range(n - 1)]
         bwd = [(i, i - 1) for i in range(1, n)]
-    # lo halo comes from the previous rank's hi edge (sent "forward"),
-    # hi halo from the next rank's lo edge (sent "backward").
-    lo_halo = lax.ppermute(_edge(u, dim, "hi", width), axis_name, fwd)
-    hi_halo = lax.ppermute(_edge(u, dim, "lo", width), axis_name, bwd)
+    lo_halo = lax.ppermute(hi_edge, axis_name, fwd)
+    hi_halo = lax.ppermute(lo_edge, axis_name, bwd)
     return lo_halo, hi_halo
+
+
+def exchange_halo(u: jax.Array, axis_name: str, width: int, dim: int,
+                  periodic: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Returns (lo_halo, hi_halo): the neighbor edges this shard receives."""
+    return exchange_edges(_edge(u, dim, "lo", width), _edge(u, dim, "hi", width),
+                          axis_name, periodic)
 
 
 def pad_with_halo(u: jax.Array, axis_name: str, width: int, dim: int,
@@ -85,41 +107,69 @@ def stencil_two_phase(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array]
     return stencil_fn(padded)
 
 
+def _interior_chunks(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
+                     width: int, dim: int, subdomains: int) -> List[jax.Array]:
+    """Interior cells [width, n-width) as up to `subdomains` independent chunk
+    tasks (the paper's grainsize knob, Code 4's `for s in subdomains`).
+
+    The chunk covering cells [a, b) reads ONLY u[a-width : b+width] — each
+    task's footprint is its subdomain plus `width` ghost cells, so boundary
+    strips are never recomputed and the chunks are disjoint work the
+    latency-hiding scheduler interleaves with the halo ppermutes."""
+    n = u.shape[dim]
+    m = n - 2 * width                     # interior cell count
+    k = max(1, min(subdomains, m // max(1, 2 * width)))  # keep chunks >= 2*width
+    if k == 1:
+        return [stencil_fn(u)]           # one interior task, full ghost context
+    bounds = [width + (m * t) // k for t in range(k + 1)]
+    return [stencil_fn(lax.slice_in_dim(u, a - width, b + width, axis=dim))
+            for a, b in zip(bounds[:-1], bounds[1:])]
+
+
+def _boundary_srcs(u: jax.Array, lo_halo: jax.Array, hi_halo: jax.Array,
+                   width: int, dim: int) -> Tuple[jax.Array, jax.Array]:
+    n = u.shape[dim]
+    lo_src = jnp.concatenate(
+        [lo_halo, lax.slice_in_dim(u, 0, 2 * width, axis=dim)], axis=dim)
+    hi_src = jnp.concatenate(
+        [lax.slice_in_dim(u, n - 2 * width, n, axis=dim), hi_halo], axis=dim)
+    return lo_src, hi_src
+
+
+def stencil_with_halo(u: jax.Array, lo_halo: jax.Array, hi_halo: jax.Array,
+                      stencil_fn: Callable[[jax.Array], jax.Array],
+                      width: int, dim: int, subdomains: int = 4) -> jax.Array:
+    """Communication-free half of the hdot schedule: apply `stencil_fn` to a
+    block whose halos were ALREADY received (e.g. pipelined by halo_scan or a
+    solver carrying halos across iterations). Boundary strips consume the
+    halos; the interior is over-decomposed into `subdomains` chunk tasks."""
+    n = u.shape[dim]
+    if n < 4 * width:  # degenerate block: no interior to split off
+        return stencil_fn(jnp.concatenate([lo_halo, u, hi_halo], axis=dim))
+    lo_src, hi_src = _boundary_srcs(u, lo_halo, hi_halo, width, dim)
+    lo_out = stencil_fn(lo_src)                  # updates cells [0, width)
+    hi_out = stencil_fn(hi_src)                  # updates cells [n-width, n)
+    interior = _interior_chunks(u, stencil_fn, width, dim, subdomains)
+    return jnp.concatenate([lo_out, *interior, hi_out], axis=dim)
+
+
 def stencil_hdot(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
                  axis_name: str, width: int, dim: int,
                  periodic: bool = False,
                  subdomains: int = 4) -> jax.Array:
     """Interior/boundary over-decomposition (paper Code 4).
 
-    The interior result depends only on `u`; the two boundary strips are the
-    sole consumers of the halo ppermutes. `subdomains` controls how much
-    interior work is available to hide the exchange (>=2 interior chunks keeps
-    the scheduler's window open; chunks are concatenated back, so numerics are
-    identical to the two-phase schedule — asserted in tests).
+    The interior — split into `subdomains` chunk tasks, each reading only its
+    own slice plus ghosts — depends only on `u`; the two boundary strips are
+    the sole consumers of the halo ppermutes. Chunks are concatenated back, so
+    numerics are identical to the two-phase schedule (asserted in tests).
     """
     n = u.shape[dim]
     if n < 4 * width:  # degenerate block: no interior to overlap with
         return stencil_two_phase(u, stencil_fn, axis_name, width, dim, periodic)
-
     lo_halo, hi_halo = exchange_halo(u, axis_name, width, dim, periodic)
-
-    # Interior "tasks": cells [width, n-width) need no halo. Over-decompose
-    # them with the same scheme used across shards (decompose_grid in 1-D).
-    interior_src = u  # full block provides ghost context for interior cells
-    interior = stencil_fn(interior_src)          # updates cells [width, n-width)
-    # Boundary "tasks": the only consumers of the received halos.
-    lo_src = jnp.concatenate(
-        [lo_halo, lax.slice_in_dim(u, 0, 2 * width, axis=dim)], axis=dim)
-    hi_src = jnp.concatenate(
-        [lax.slice_in_dim(u, n - 2 * width, n, axis=dim), hi_halo], axis=dim)
-    lo_out = stencil_fn(lo_src)                  # updates cells [0, width)
-    hi_out = stencil_fn(hi_src)                  # updates cells [n-width, n)
-
-    # Optional further over-decomposition of the interior into `subdomains`
-    # chunks: not needed for correctness — XLA already sees one large
-    # independent region — but mirrors the paper's task granularity knob.
-    del subdomains
-    return jnp.concatenate([lo_out, interior, hi_out], axis=dim)
+    return stencil_with_halo(u, lo_halo, hi_halo, stencil_fn, width, dim,
+                             subdomains)
 
 
 def stencil_apply(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
@@ -131,6 +181,54 @@ def stencil_apply(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
     if mode in ("none", "two_phase"):
         return stencil_two_phase(u, stencil_fn, axis_name, width, dim, periodic)
     raise ValueError(f"unknown overlap mode {mode!r}")
+
+
+def halo_scan(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
+              axis_name: str, width: int, dim: int, steps: int,
+              periodic: bool = False, mode: str = "hdot",
+              subdomains: int = 4,
+              step_out_fn: Optional[Callable[[jax.Array, jax.Array], jax.Array]]
+              = None) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Double-buffered multi-step stencil driver (lax.scan over `steps`).
+
+    In hdot mode the scan carry is (block, lo_halo, hi_halo): the halos for
+    step k arrive with the carry, so the body can (1) finish step k's boundary
+    strips, (2) IMMEDIATELY launch the ppermute that feeds step k+1 — the new
+    block's edges are exactly those boundary outputs — and (3) only then chew
+    through step k's interior chunk tasks. The exchange for the next step is
+    therefore always in flight behind the current step's interior compute; the
+    only exposed latency is the single pipeline-fill exchange before the scan.
+
+    `step_out_fn(u_new, u_old)` optionally produces a per-step output (e.g. a
+    residual); its stacked results are returned as the second element (None
+    when not provided). Numerics are identical to `steps` iterated calls of
+    :func:`stencil_apply` — asserted in tests.
+    """
+    n = u.shape[dim]
+    if mode != "hdot" or n < 4 * width:
+        # two-phase baseline (or degenerate block): plain comm->compute scan
+        def body(u, _):
+            u_new = stencil_apply(u, stencil_fn, axis_name, width, dim,
+                                  periodic, mode, subdomains)
+            return u_new, step_out_fn(u_new, u) if step_out_fn else None
+        return lax.scan(body, u, None, length=steps)
+
+    def body(carry, _):
+        u, lo_halo, hi_halo = carry
+        lo_src, hi_src = _boundary_srcs(u, lo_halo, hi_halo, width, dim)
+        lo_out = stencil_fn(lo_src)              # new cells [0, width)
+        hi_out = stencil_fn(hi_src)              # new cells [n-width, n)
+        # The updated block's edge strips ARE lo_out/hi_out — hand them to the
+        # ring now so the next step's halos travel while the interior computes.
+        lo_next, hi_next = exchange_edges(lo_out, hi_out, axis_name, periodic)
+        interior = _interior_chunks(u, stencil_fn, width, dim, subdomains)
+        u_new = jnp.concatenate([lo_out, *interior, hi_out], axis=dim)
+        out = step_out_fn(u_new, u) if step_out_fn else None
+        return (u_new, lo_next, hi_next), out
+
+    lo0, hi0 = exchange_halo(u, axis_name, width, dim, periodic)  # pipeline fill
+    (u, _, _), outs = lax.scan(body, (u, lo0, hi0), None, length=steps)
+    return u, outs
 
 
 def multi_dim_stencil(u: jax.Array,

@@ -8,6 +8,13 @@ layer-aligned buckets (subdomains of the parameter domain!) whose reductions
 are independent collectives the XLA scheduler overlaps with remaining
 backward compute.
 
+The HDOT sync is ZERO-COPY: each bucket is reduced as a pytree — one
+``lax.psum`` over the bucket's leaf tuple, which XLA lowers to a single
+multi-operand all-reduce operating on the gradient buffers in place. No
+flatten/concatenate staging copy, no post-reduce reslice, and no dtype
+round-trip (each leaf is reduced in its own dtype), unlike the two-phase
+baseline which pays two full-parameter-size copies plus an upcast per step.
+
 Also provides microbatch gradient accumulation (the sequence-of-subdomains
 view of the global batch) used by the trainer and by the dry-run.
 """
@@ -56,19 +63,19 @@ def grad_sync_two_phase(grads: PyTree, axes: AxisNames) -> PyTree:
 
 def grad_sync_hdot(grads: PyTree, axes: AxisNames, num_buckets: int = 8) -> PyTree:
     """HDOT: per-bucket reductions — independent collectives that the
-    latency-hiding scheduler interleaves with compute (and with each other)."""
+    latency-hiding scheduler interleaves with compute (and with each other).
+
+    Zero-copy: a bucket is reduced as ONE ``lax.psum`` over its leaf tuple
+    (a single multi-operand all-reduce), so leaves are never concatenated
+    into a staging buffer, never resliced, and keep their dtypes."""
     leaves, treedef = jax.tree.flatten(grads)
-    buckets = make_buckets(grads, num_buckets)
+    if not leaves:
+        return grads
     synced: dict = {}
-    for bucket in buckets:
-        idxs = [i for i, _ in bucket]
-        vals = [l for _, l in bucket]
-        flat = jnp.concatenate([v.reshape(-1) for v in vals])
-        flat = lax.psum(flat, axes)
-        off = 0
-        for i, v in zip(idxs, vals):
-            synced[i] = flat[off:off + v.size].reshape(v.shape).astype(v.dtype)
-            off += v.size
+    for bucket in make_buckets(grads, num_buckets):
+        idxs = tuple(i for i, _ in bucket)
+        reduced = lax.psum(tuple(v for _, v in bucket), axes)
+        synced.update(zip(idxs, reduced))
     return jax.tree.unflatten(treedef, [synced[i] for i in range(len(leaves))])
 
 

@@ -21,7 +21,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.halo import multi_dim_stencil, stencil_apply
+from repro import compat  # noqa: F401  (jax version shims)
+from repro.core.halo import (exchange_halo, halo_scan, multi_dim_stencil,
+                             stencil_apply, stencil_with_halo)
 from repro.core.reduction import hdot_reduce, task_reduce
 
 
@@ -34,18 +36,14 @@ def _jacobi_stencil(padded: jax.Array, dim: int = 0) -> jax.Array:
     return 0.25 * (p[:-2, 1:-1] + p[2:, 1:-1] + p[1:-1, :-2] + p[1:-1, 2:])
 
 
-def heat2d_local_step(u: jax.Array, axis_name: str, mode: str,
-                      subdomains: int = 4) -> Tuple[jax.Array, jax.Array]:
-    """One Jacobi sweep + paper-Code-5 residual (task partials -> MAX allreduce).
-    Runs inside shard_map; `u` is the local row-block."""
-    u_new = stencil_apply(u, _jacobi_stencil, axis_name, width=1, dim=0,
-                          periodic=False, mode=mode, subdomains=subdomains)
-    diff = jnp.abs(u_new - u)
-    # task-level subdomain partials (paper: reduction(MAX:rlocal))
-    chunks = jnp.array_split(diff, subdomains, axis=0)
-    partials = [jnp.max(c) for c in chunks]
-    residual = hdot_reduce(partials, axis_name, op="max")
-    return u_new, residual
+def _heat2d_residual(axis_name: str, subdomains: int):
+    """paper-Code-5 residual: task-level subdomain MAX partials -> allreduce."""
+    def residual(u_new, u):
+        diff = jnp.abs(u_new - u)
+        chunks = jnp.array_split(diff, subdomains, axis=0)
+        partials = [jnp.max(c) for c in chunks]
+        return hdot_reduce(partials, axis_name, op="max")
+    return residual
 
 
 def heat2d_solve(u0: jax.Array, mesh, axis_name: str, iters: int,
@@ -53,13 +51,15 @@ def heat2d_solve(u0: jax.Array, mesh, axis_name: str, iters: int,
     """Run `iters` sweeps; returns (final grid, residual history).
 
     u0 is the GLOBAL grid; sharding over rows (the paper's horizontal MPI
-    subdomains) happens here — process-level decomposition == mesh."""
+    subdomains) happens here — process-level decomposition == mesh. The sweep
+    loop is the double-buffered `halo_scan`: sweep k+1's halo ppermute departs
+    while sweep k's interior chunk tasks compute (hdot mode)."""
 
     def local(u):
-        def body(u, _):
-            u, r = heat2d_local_step(u, axis_name, mode, subdomains)
-            return u, r
-        return lax.scan(body, u, None, length=iters)
+        return halo_scan(u, _jacobi_stencil, axis_name, width=1, dim=0,
+                         steps=iters, periodic=False, mode=mode,
+                         subdomains=subdomains,
+                         step_out_fn=_heat2d_residual(axis_name, subdomains))
 
     f = jax.shard_map(local, mesh=mesh, in_specs=P(axis_name, None),
                       out_specs=(P(axis_name, None), P()))
@@ -100,6 +100,18 @@ def rk3_rhs(v: jax.Array, axis_name: Optional[str], mode: str,
                                   periodic=True, mode=mode)
 
 
+def _rk3_rhs_with_halo(v: jax.Array, lo: jax.Array, hi: jax.Array,
+                       nu: float = 0.05, subdomains: int = 4) -> jax.Array:
+    """RHS with z-halos already in hand (pipelined schedule): the x/y stencils
+    are multi_dim_stencil's local-pad tasks, the z stencil consumes the
+    carried halos — no exchange on this stage's critical path."""
+    xy = multi_dim_stencil(v, _diff2_dir, [(0, None), (1, None)], width=4,
+                           periodic=True)
+    z = stencil_with_halo(v, lo, hi, functools.partial(_diff2_dir, dim=2),
+                          width=4, dim=2, subdomains=subdomains)
+    return nu * (xy + z)
+
+
 def rk3_local_step(v: jax.Array, axis_name: Optional[str], dt: float,
                    mode: str) -> jax.Array:
     """One 3-stage low-storage RK step (paper Code 8's rk loop): each stage is
@@ -113,9 +125,37 @@ def rk3_local_step(v: jax.Array, axis_name: Optional[str], dt: float,
     return v
 
 
+def rk3_local_step_pipelined(v: jax.Array, lo: jax.Array, hi: jax.Array,
+                             axis_name: str, dt: float,
+                             subdomains: int = 4
+                             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """RK3 step with z-halos carried across stages: each stage consumes the
+    halos exchanged at the END of the previous stage, and launches the next
+    exchange the moment its `v` update lands — so every z ppermute flies
+    behind the next stage's x/y stencils and interior z chunks (the
+    double-buffered analogue of Code 8's comm task)."""
+    s = jnp.zeros_like(v)
+    for a, b in zip(_RK3_A, _RK3_B):
+        rhs = _rk3_rhs_with_halo(v, lo, hi, subdomains=subdomains)
+        s = a * s + dt * rhs
+        v = v + b * s
+        lo, hi = exchange_halo(v, axis_name, width=4, dim=2, periodic=True)
+    return v, lo, hi
+
+
 def rk3_solve(v0: jax.Array, mesh, axis_name: str, steps: int, dt: float = 0.05,
               mode: str = "hdot") -> jax.Array:
     def local(v):
+        if mode == "hdot" and v.shape[2] >= 16:
+            lo, hi = exchange_halo(v, axis_name, width=4, dim=2,
+                                   periodic=True)  # pipeline fill
+
+            def body(carry, _):
+                return rk3_local_step_pipelined(*carry, axis_name, dt), None
+
+            (v, _, _), _ = lax.scan(body, (v, lo, hi), None, length=steps)
+            return v
+
         def body(v, _):
             return rk3_local_step(v, axis_name, dt, mode), None
         v, _ = lax.scan(body, v, None, length=steps)
@@ -127,10 +167,16 @@ def rk3_solve(v0: jax.Array, mesh, axis_name: str, steps: int, dt: float = 0.05,
 
 
 # ============================================================ HPCCG CG (§4.3)
-def _stencil27_matvec(p: jax.Array, axis_name: Optional[str], mode: str) -> jax.Array:
+def _stencil27_matvec(p: jax.Array, axis_name: Optional[str], mode: str,
+                      halos: Optional[Tuple[jax.Array, jax.Array]] = None,
+                      subdomains: int = 4) -> jax.Array:
     """y = A p for HPCCG's 27-point operator (diag=26, off-diag=-1) on a 3-D
     grid stacked along z (dim 2), halo width 1. Only z is decomposed, so the
-    exchanged plane carries all in-plane diagonals (corner-free exchange)."""
+    exchanged plane carries all in-plane diagonals (corner-free exchange).
+
+    `halos=(lo, hi)` supplies pre-exchanged z-planes (the pipelined CG
+    schedule: the exchange for iteration k+1's matvec departs when p_{k+1} is
+    formed, and only the boundary-plane tasks here consume it)."""
 
     def per_z(padded: jax.Array, dim: int) -> jax.Array:
         assert dim == 2
@@ -150,6 +196,9 @@ def _stencil27_matvec(p: jax.Array, axis_name: Optional[str], mode: str) -> jax.
         return acc
 
     fn = functools.partial(per_z, dim=2)
+    if halos is not None:
+        return stencil_with_halo(p, halos[0], halos[1], fn, width=1, dim=2,
+                                 subdomains=subdomains)
     if axis_name is None:
         pads = [(0, 0), (0, 0), (1, 1)]
         return fn(jnp.pad(p, pads))
@@ -174,24 +223,49 @@ def hpccg_solve(b: jax.Array, mesh, axis_name: str, iters: int,
                 mode: str = "hdot", subdomains: int = 4) -> Tuple[jax.Array, jax.Array]:
     """Unpreconditioned CG on the 27-point system (HPCCG's CG core; the paper
     taskifies ddot/waxpby/sparsemv — here each is an over-decomposed op).
-    Returns (x, residual-norm history)."""
+    Returns (x, residual-norm history).
+
+    hdot mode pipelines the matvec halo: the z-plane exchange for iteration
+    k+1 is launched the moment p_{k+1} is formed, so it rides behind the two
+    ddot allreduces, the waxpby tasks, and the next matvec's interior chunks
+    — only the boundary-plane tasks of the next matvec wait on it."""
 
     def local(b_loc):
         x = jnp.zeros_like(b_loc)
         r = b_loc
         p = r
         rtrans = _ddot(r, r, axis_name, subdomains)
+        pipelined = mode == "hdot" and b_loc.shape[2] >= 4
 
-        def body(carry, _):
-            x, r, p, rtrans = carry
-            Ap = _stencil27_matvec(p, axis_name, mode)
+        def step(x, r, p, rtrans, halos):
+            Ap = _stencil27_matvec(p, axis_name, mode, halos=halos,
+                                   subdomains=subdomains)
             alpha = rtrans / _ddot(p, Ap, axis_name, subdomains)
             x = x + alpha * p          # waxpby tasks
             r = r - alpha * Ap
             rtrans_new = _ddot(r, r, axis_name, subdomains)
             beta = rtrans_new / rtrans
             p = r + beta * p
-            return (x, r, p, rtrans_new), jnp.sqrt(rtrans_new)
+            return x, r, p, rtrans_new
+
+        if pipelined:
+            halos0 = exchange_halo(p, axis_name, width=1, dim=2, periodic=False)
+
+            def body(carry, _):
+                x, r, p, rtrans, halos = carry
+                x, r, p, rtrans = step(x, r, p, rtrans, halos)
+                halos = exchange_halo(p, axis_name, width=1, dim=2,
+                                      periodic=False)  # for the NEXT matvec
+                return (x, r, p, rtrans, halos), jnp.sqrt(rtrans)
+
+            (x, r, p, rtrans, _), hist = lax.scan(
+                (body), (x, r, p, rtrans, halos0), None, length=iters)
+            return x, hist
+
+        def body(carry, _):
+            x, r, p, rtrans = carry
+            x, r, p, rtrans = step(x, r, p, rtrans, None)
+            return (x, r, p, rtrans), jnp.sqrt(rtrans)
 
         (x, r, p, rtrans), hist = lax.scan(body, (x, r, p, rtrans), None, length=iters)
         return x, hist

@@ -94,7 +94,9 @@ def _layer_period(arch: str) -> int:
 def _extract(compiled, lowered_text: Optional[str] = None) -> Dict[str, Any]:
     from repro.analysis.hlo import count_ops, parse_collectives
 
-    cost = compiled.cost_analysis()
+    from repro.compat import cost_analysis_dict
+
+    cost = cost_analysis_dict(compiled)
     mem = compiled.memory_analysis()
     text = compiled.as_text()
     coll = parse_collectives(text)

@@ -16,29 +16,35 @@ from typing import Optional, Tuple
 import jax
 from jax.sharding import Mesh
 
+from repro import compat  # noqa: F401  (backfills jax.shard_map on old jax)
 
-def _auto(n: int):
-    from jax.sharding import AxisType
 
-    return (AxisType.Auto,) * n
+def _auto_kw(n: int) -> dict:
+    """axis_types kwarg for jax.make_mesh; {} on jax versions without
+    Mesh axis types (all axes are implicitly Auto there)."""
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_auto_kw(len(axes)))
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
     """Arbitrary mesh for tests/benchmarks (e.g. (8,), ('data',) on 8 host
     devices)."""
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_auto_kw(len(axes)))
 
 
 def make_single_device_mesh(axes: Tuple[str, ...] = ("data", "model")) -> Mesh:
     """1-device mesh with the production axis names: lets the full sharded
     code path run on one CPU device (every axis has size 1)."""
-    return jax.make_mesh((1,) * len(axes), axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh((1,) * len(axes), axes, **_auto_kw(len(axes)))
 
 
 def describe(mesh: Mesh) -> str:

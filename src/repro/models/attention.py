@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat  # noqa: F401  (jax version shims)
 from repro.config.base import ModelConfig
 from repro.models.layers import ParamSpec, apply_rope, rms_norm
 from repro.sharding.rules import with_logical

@@ -1,12 +1,17 @@
 """Training runtime: sharded step, microbatch accumulation (HDOT subdomains of
 the global batch), checkpoint/restart, elastic re-mesh.
 
-The step function is GSPMD-jitted: parameters/optimizer states arrive sharded
-per sharding.rules (FSDP over (pod,data), TP over model), gradients are
-reduced by the partitioner, and the HDOT overlap schedule is controlled by
-(a) ParallelConfig.overlap for the explicit schedules in core.overlap and
-(b) collective_matmul for the ring TP layers. On a 1-device CPU mesh the same
-code runs unsharded (tests).
+The step function is jitted with donated param/opt buffers. With a DP-only
+mesh (every non-dp axis trivial), the loss/grad computation runs under
+shard_map over the DP axes and gradient
+reduction is the EXPLICIT schedule from core.overlap — ParallelConfig.overlap
+picks the zero-copy bucketed HDOT sync (per-bucket multi-operand all-reduces
+free to interleave with backward compute) or the monolithic two-phase
+baseline, and ParallelConfig.grad_buckets sets the over-decomposition degree.
+Without a mesh — or on a mesh with a non-trivial TP axis, where replicating
+params inside shard_map would break the TP layout — the partitioner reduces
+implicitly (GSPMD). On a 1-device CPU mesh the same code runs unsharded
+(tests).
 """
 from __future__ import annotations
 
@@ -21,7 +26,7 @@ import numpy as np
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.checkpoint.elastic import shardings_for
 from repro.config.base import RunConfig
-from repro.core.overlap import accumulate_grads
+from repro.core.overlap import accumulate_grads, grad_sync
 from repro.data.pipeline import SyntheticLMDataset
 from repro.models.model import ModelOptions, build_model
 from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
@@ -78,18 +83,65 @@ class Trainer:
         model = self.model
         opt_cfg = self.opt_cfg
         accum = run.parallel.accum_steps
+        mesh = self.mesh
+        # mesh axes that carry data parallelism: explicit HDOT grad-sync runs
+        # over exactly these (absent axes contribute no replication)
+        sync_axes = tuple(a for a in run.parallel.dp_axes
+                          if mesh is not None and a in mesh.axis_names)
+        # The explicit schedule treats params as replicated inside shard_map,
+        # which is only faithful on DP-only meshes: any non-trivial extra axis
+        # (TP over 'model') must keep the GSPMD path. FSDP param gathering is
+        # the remaining composition gap — see ROADMAP "Open items".
+        explicit_sync = sync_axes and all(
+            mesh.shape[a] == 1 for a in mesh.axis_names if a not in sync_axes)
 
         def loss_and_grad(params, batch):
             return jax.value_and_grad(model.train_loss)(params, batch)
 
+        def grads_fn(params, batch):
+            if not explicit_sync:
+                return accumulate_grads(loss_and_grad, params, batch, accum)
+
+            # Explicit-schedule path: shard_map over the DP axes so the
+            # gradient reduction is the bucketed zero-copy HDOT sync from
+            # core.overlap (or the monolithic two-phase baseline) instead of
+            # a partitioner-chosen collective.
+            from jax.sharding import PartitionSpec as P
+
+            n_shards = 1
+            for a in sync_axes:
+                n_shards *= mesh.shape[a]
+
+            def local(p, b):
+                from repro.sharding.rules import no_sharding
+
+                # manual region: logical sharding constraints must be inert
+                with no_sharding():
+                    loss, g = accumulate_grads(loss_and_grad, p, b, accum)
+                g = grad_sync(g, sync_axes, mode=run.parallel.overlap,
+                              num_buckets=run.parallel.grad_buckets)
+                # psum of per-shard mean-grads -> global mean over all shards
+                g = jax.tree.map(lambda x: x / n_shards, g)
+                return jax.lax.pmean(loss, sync_axes), g
+
+            batch_specs = jax.tree.map(
+                lambda x: P(sync_axes, *([None] * (x.ndim - 1))), batch)
+            # check_vma off: train_loss carries internal sharding constraints
+            # (with_logical) the replication checker has no rule for
+            return jax.shard_map(
+                local, mesh=mesh, in_specs=(P(), batch_specs),
+                out_specs=(P(), P()), check_vma=False)(params, batch)
+
         def step_fn(params, opt_state, batch):
-            loss, grads = accumulate_grads(loss_and_grad, params, batch, accum)
+            loss, grads = grads_fn(params, batch)
             lr = warmup_cosine(opt_state["step"], opt_cfg.lr,
                                run.train.warmup_steps, run.train.total_steps)
             params, opt_state, gnorm = adamw_update(grads, opt_state, params,
                                                     opt_cfg, lr)
             return params, opt_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
 
+        # params and optimizer state are donated: the bucketed sync and the
+        # optimizer update run in place on the gradient/param buffers
         return jax.jit(step_fn, donate_argnums=(0, 1))
 
     # ------------------------------------------------------------------- loop

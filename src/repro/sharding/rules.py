@@ -145,6 +145,21 @@ class use_sharding:
         return False
 
 
+class no_sharding:
+    """Temporarily clear the logical-sharding context: `with_logical` becomes
+    the identity. Required around shard_map bodies — inside a manual region
+    the mesh axes are already consumed, and a GSPMD sharding constraint
+    naming them is rejected."""
+
+    def __enter__(self) -> None:
+        self._prev = current_context()
+        _LOCAL.ctx = None
+
+    def __exit__(self, *exc):
+        _LOCAL.ctx = self._prev
+        return False
+
+
 def _mesh_axes_present(ctx: ShardingContext, cand: MeshAxes) -> MeshAxes:
     if cand is None:
         return None

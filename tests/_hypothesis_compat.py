@@ -1,0 +1,41 @@
+"""Graceful degradation when `hypothesis` is not installed.
+
+The container image does not ship hypothesis, and a bare ``from hypothesis
+import given`` at module scope killed collection of the ENTIRE tier-1 suite.
+Test modules import ``given/settings/st`` from here instead: with hypothesis
+present they are the real thing; without it, ``@given`` turns the test into a
+skip (reason recorded) while every non-property test in the module still runs.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only in the bare image
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (property test)")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _Strategies:
+        """Stub of `hypothesis.strategies`: any strategy call returns None —
+        the decorated test is skipped before the value is ever used."""
+
+        def __getattr__(self, name):
+            def strategy(*_args, **_kwargs):
+                return None
+            return strategy
+
+    st = _Strategies()

@@ -7,8 +7,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.domain import (Box, Domain, decompose_grid, halo_cells,
                                halo_fraction)

@@ -9,8 +9,7 @@ import textwrap
 from pathlib import Path
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.runtime.ft import reassign_host_shards
 

@@ -7,8 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention import ref as fa_ref
@@ -166,3 +165,15 @@ def test_lru_ref_vs_sequential():
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(np.asarray(lr), np.asarray(ls),
                                rtol=1e-5, atol=1e-5)
+
+
+def test_heat2d_pallas_strip_halos_multi_tile_multi_sweep():
+    """Strip-halo staging must reproduce the full-tile oracle when halos cross
+    many tile boundaries and sweeps>1 reuse the VMEM-resident tile."""
+    u = jax.random.normal(_key(7), (128, 128), jnp.float32)
+    for tile, sweeps in [((32, 64), 3), ((64, 64), 2), ((128, 128), 4)]:
+        got = heat_ops.heat2d_sweep(u, tile=tile, sweeps=sweeps,
+                                    impl="pallas", interpret=True)
+        want = heat_ops.heat2d_sweep(u, tile=tile, sweeps=sweeps, impl="ref")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)

@@ -5,8 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro.sharding.rules import (DEFAULT_RULES, ShardingContext,

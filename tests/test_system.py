@@ -163,3 +163,101 @@ def test_mini_production_cell_lowers_on_16dev():
     """
     r = run_devices(code, 16)
     assert r["ok"] and r["colls"] > 0
+
+
+@pytest.mark.slow
+def test_grad_sync_pytree_psum_4dev_mixed_dtypes():
+    """Zero-copy bucketed sync == monolithic two-phase sync on a REAL 4-way
+    reduction with mixed-dtype leaves (integer-valued: sums are exact)."""
+    code = """
+    import json, functools, jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.core.overlap import grad_sync
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4,), ("data",))
+    k = jax.random.PRNGKey(0)
+    tree = {
+        "emb": jax.random.randint(k, (16, 8), -4, 5).astype(jnp.bfloat16),
+        "w1": jax.random.randint(jax.random.fold_in(k, 1), (33,), -4, 5).astype(jnp.float32),
+        "w2": jax.random.randint(jax.random.fold_in(k, 2), (4, 4), -4, 5).astype(jnp.float16),
+        "b": jnp.asarray(3.0),
+    }
+    outs = {}
+    for mode in ("two_phase", "hdot"):
+        f = jax.jit(jax.shard_map(
+            functools.partial(grad_sync, axes="data", mode=mode, num_buckets=3),
+            mesh=mesh, in_specs=(P(),), out_specs=P()))
+        outs[mode] = f(tree)
+    same = all(bool(np.array_equal(np.asarray(outs["hdot"][k], np.float32),
+                                   np.asarray(outs["two_phase"][k], np.float32)))
+               for k in tree)
+    dtypes_kept = all(outs["hdot"][k].dtype == tree[k].dtype for k in tree)
+    scaled = bool(np.array_equal(np.asarray(outs["hdot"]["b"]), 4 * 3.0))
+    print(json.dumps({"same": same, "dtypes_kept": dtypes_kept, "scaled": scaled}))
+    """
+    r = run_devices(code, 4)
+    assert r == {"same": True, "dtypes_kept": True, "scaled": True}
+
+
+@pytest.mark.parametrize("devices", [3, 4])
+@pytest.mark.slow
+def test_matmul_rs_bidirectional_ring(devices):
+    """Bidirectional chunked reduce-scatter ring == psum_scatter, on odd AND
+    even mesh sizes (odd rings have asymmetric fwd/bwd path lengths)."""
+    code = f"""
+    import json, functools, jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.core.collective_matmul import matmul_rs
+    from repro.launch.mesh import make_mesh
+    devices = {devices}
+    mesh = make_mesh((devices,), ("model",))
+    k = jax.random.PRNGKey(0)
+    # s_loc = 15 (odd): bidirectional pieces are UNEVEN, exercising the
+    # non-divisor chunk split
+    h = jax.random.normal(k, (15 * devices, 8 * devices), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(k, 1), (8 * devices, 16), jnp.float32)
+    zs = {{}}
+    for mode, chunks in (("two_phase", None), ("hdot", None), ("hdot", 1), ("hdot", 3)):
+        f = jax.jit(jax.shard_map(
+            functools.partial(matmul_rs, axis_name="model", mode=mode, chunks=chunks),
+            mesh=mesh, in_specs=(P(None, "model"), P("model", None)),
+            out_specs=P("model", None)))
+        zs[f"{{mode}}-{{chunks}}"] = np.asarray(f(h, v))
+    want = np.asarray(h) @ np.asarray(v)
+    ok = {{name: bool(np.allclose(z, want, rtol=1e-4, atol=1e-4))
+          for name, z in zs.items()}}
+    print(json.dumps(ok))
+    """
+    r = run_devices(code, devices)
+    assert all(r.values()), r
+
+
+@pytest.mark.slow
+def test_halo_scan_4dev_equals_iterated_apply():
+    """Double-buffered halo_scan == iterated stencil_apply across a real
+    4-way ring (periodic and Dirichlet)."""
+    code = """
+    import json, jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.core.halo import halo_scan, stencil_apply
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4,), ("data",))
+    avg3 = lambda p: (p[:-2] + p[1:-1] + p[2:]) / 3.0
+    u = jax.random.normal(jax.random.PRNGKey(0), (64, 5), jnp.float32)
+    ok = {}
+    for periodic in (False, True):
+        got, _ = jax.jit(jax.shard_map(
+            lambda x: halo_scan(x, avg3, "data", 1, 0, 6, periodic=periodic),
+            mesh=mesh, in_specs=(P("data"),), out_specs=(P("data"), P())))(u)
+        def iterate(x):
+            for _ in range(6):
+                x = stencil_apply(x, avg3, "data", 1, 0, periodic, "hdot")
+            return x
+        want = jax.jit(jax.shard_map(iterate, mesh=mesh, in_specs=(P("data"),),
+                                     out_specs=P("data")))(u)
+        ok[str(periodic)] = bool(np.allclose(np.asarray(got), np.asarray(want),
+                                             rtol=1e-5, atol=1e-6))
+    print(json.dumps(ok))
+    """
+    r = run_devices(code, 4)
+    assert r == {"False": True, "True": True}
