@@ -18,6 +18,13 @@ REPO = Path(__file__).resolve().parents[1]
 RESULTS = REPO / "results" / "bench"
 
 
+def parse_mesh_shape(mesh_shape: str) -> tuple:
+    """'RxC' -> (R, C) for the 2-D (rows x cols) benchmark topologies."""
+    r, c = (int(s) for s in mesh_shape.split("x"))
+    assert r >= 1 and c >= 1, mesh_shape
+    return r, c
+
+
 def run_worker(module: str, devices: int, args: List[str],
                timeout: int = 1200) -> Dict[str, Any]:
     """Run ``python -m <module> --worker <args>`` with `devices` host devices;

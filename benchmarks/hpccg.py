@@ -13,31 +13,42 @@ import argparse
 from typing import Any, Dict
 
 
-def worker(devices: int, n: int, iters: int) -> Dict[str, Any]:
+def worker(devices: int, n: int, iters: int,
+           mesh_shape: str = "") -> Dict[str, Any]:
     import jax
     import jax.numpy as jnp
     import numpy as np
 
-    from benchmarks._util import timeit
+    from benchmarks._util import parse_mesh_shape, timeit
     from repro.analysis.hlo import parse_collectives
     from repro.core.stencil import hpccg_solve
-    from repro.launch.mesh import make_mesh
+    from repro.launch.mesh import make_grid_mesh, make_mesh
 
-    mesh = make_mesh((devices,), ("data",))
+    if mesh_shape:
+        ry, rz = parse_mesh_shape(mesh_shape)
+        assert ry * rz == devices, (mesh_shape, devices)
+        mesh = make_grid_mesh(ry, rz)
+        axis = ("rows", "cols")      # 2-D row-block (y, z) decomposition
+        grid = [n, n * ry, n * rz]
+    else:
+        mesh = make_mesh((devices,), ("data",))
+        axis = "data"
+        grid = [n, n, n * devices]
     key = jax.random.PRNGKey(0)
-    b = jax.random.normal(key, (n, n, n * devices), jnp.float32)
-    out: Dict[str, Any] = {"devices": devices, "grid": [n, n, n * devices],
-                           "iters": iters}
+    b = jax.random.normal(key, tuple(grid), jnp.float32)
+    out: Dict[str, Any] = {"devices": devices, "grid": grid, "iters": iters}
+    if mesh_shape:
+        out["mesh_shape"] = mesh_shape
     hists = {}
     for mode in ("two_phase", "hdot"):
         def solve(b=b, mode=mode):
-            return hpccg_solve(b, mesh, "data", iters, mode=mode)
+            return hpccg_solve(b, mesh, axis, iters, mode=mode)
 
         sec = timeit(solve)
         x, hist = solve()
         hists[mode] = np.asarray(hist)
         lowered = jax.jit(
-            lambda b: hpccg_solve(b, mesh, "data", 1, mode=mode)).lower(b)
+            lambda b: hpccg_solve(b, mesh, axis, 1, mode=mode)).lower(b)
         coll = parse_collectives(lowered.compile().as_text())
         out[mode] = {"seconds": sec, "iters_per_s": iters / sec,
                      "coll_ops": len(coll.ops),
@@ -48,13 +59,19 @@ def worker(devices: int, n: int, iters: int) -> Dict[str, Any]:
     return out
 
 
-def run(sizes=(1, 2, 4, 8), n: int = 48, iters: int = 25) -> Dict[str, Any]:
-    from benchmarks._util import run_worker
+def run(sizes=(1, 2, 4, 8), n: int = 48, iters: int = 25,
+        mesh_shapes=()) -> Dict[str, Any]:
+    from benchmarks._util import parse_mesh_shape, run_worker
 
     rows = [run_worker("benchmarks.hpccg", d,
                        ["--devices", str(d), "--n", str(n),
                         "--iters", str(iters)])
             for d in sizes]
+    for ms in mesh_shapes:
+        ry, rz = parse_mesh_shape(ms)
+        rows.append(run_worker("benchmarks.hpccg", ry * rz,
+                               ["--devices", str(ry * rz), "--n", str(n),
+                                "--iters", str(iters), "--mesh", ms]))
     return {"table": "paper §4.3 (HPCCG CG)", "rows": rows}
 
 
@@ -64,16 +81,19 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--n", type=int, default=48)
     ap.add_argument("--iters", type=int, default=25)
+    ap.add_argument("--mesh", type=str, default="",
+                    help="RxC 2-D (y,z) process mesh; empty = z slabs")
     args = ap.parse_args()
     if args.worker:
         from benchmarks._util import emit
 
-        emit(worker(args.devices, args.n, args.iters))
+        emit(worker(args.devices, args.n, args.iters, args.mesh))
         return
     rec = run()
     for r in rec["rows"]:
         tp, hd = r["two_phase"], r["hdot"]
-        print(f"devices={r['devices']} two_phase={tp['iters_per_s']:7.2f}it/s "
+        print(f"devices={r['devices']} mesh={r.get('mesh_shape', '-'):>5s} "
+              f"two_phase={tp['iters_per_s']:7.2f}it/s "
               f"hdot={hd['iters_per_s']:7.2f}it/s "
               f"resid_drop={hd['residual_drop']:9.1f} "
               f"conv_identical={r['convergence_identical']}")

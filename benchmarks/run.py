@@ -12,8 +12,11 @@ Results land in results/bench/*.json + a markdown summary. Run:
 
 --quick additionally writes BENCH_quick.json at the repo root: one
 consolidated record (per suite: ops/s for both schedules + the
-hdot/two_phase ratio) that is COMMITTED, so the overlap delta is a tracked
-trajectory across PRs instead of a one-off print.
+hdot/two_phase ratio, with `mesh_shape` rows tracking the 2-D rows x cols
+decompositions) that is COMMITTED, so the overlap delta is a tracked
+trajectory across PRs instead of a one-off print. Add --update-docs to
+regenerate the benchmark table in docs/overlap.md from the same record
+(tests/test_docs.py fails if the committed pair drifts apart).
 """
 from __future__ import annotations
 
@@ -30,13 +33,15 @@ SUITES = {
     "table1_halo_memory": lambda quick: table1_halo_memory.run(),
     "table2_heat2d": lambda quick: table2_heat2d.run(
         sizes=(1, 2) if quick else (1, 2, 4, 8),
-        n=256 if quick else 1024, iters=10 if quick else 50),
+        n=256 if quick else 1024, iters=10 if quick else 50,
+        mesh_shapes=("4x1", "2x2") if quick else ("4x1", "2x2", "8x1", "4x2")),
     "table4_creams": lambda quick: table4_creams.run(
         sizes=(1, 2) if quick else (1, 2, 4, 8),
         nz=256 if quick else 1024, steps=4 if quick else 10),
     "hpccg": lambda quick: hpccg.run(
         sizes=(1, 2) if quick else (1, 2, 4, 8),
-        n=24 if quick else 48, iters=10 if quick else 25),
+        n=24 if quick else 48, iters=10 if quick else 25,
+        mesh_shapes=("4x1", "2x2") if quick else ("4x1", "2x2", "8x1", "4x2")),
     "bench_overlap": lambda quick: bench_overlap.run(
         sizes=(2,) if quick else (4, 8),
         s=1024 if quick else 4096, m=1024 if quick else 2048,
@@ -83,12 +88,22 @@ def _quick_record(records: dict) -> dict:
             if rates is None:
                 continue
             key, tp, hd = rates
-            rows.append({"devices": r.get("devices"), "metric": key,
-                         "two_phase": tp, "hdot": hd,
-                         "hdot_two_phase_ratio": hd / tp})
+            row = {"devices": r.get("devices"), "metric": key,
+                   "two_phase": tp, "hdot": hd,
+                   "hdot_two_phase_ratio": hd / tp}
+            if "mesh_shape" in r:     # 2-D (rows x cols) decomposition row
+                row["mesh_shape"] = r["mesh_shape"]
+            rows.append(row)
         entry: dict = {"rows": rows}
-        if rows:
-            entry["hdot_two_phase_ratio"] = rows[-1]["hdot_two_phase_ratio"]
+        # headline stays the largest 1-D row (comparable across PRs, PR 2
+        # onward); 2-D mesh rows get their own headline so the topology gap
+        # is tracked without redefining the original trajectory
+        slab = [r for r in rows if "mesh_shape" not in r]
+        meshed = [r for r in rows if "mesh_shape" in r]
+        if slab:
+            entry["hdot_two_phase_ratio"] = slab[-1]["hdot_two_phase_ratio"]
+        if meshed:
+            entry["hdot_two_phase_ratio_2d"] = meshed[-1]["hdot_two_phase_ratio"]
         out[short] = entry
     return out
 
@@ -126,7 +141,13 @@ def main() -> int:
     ap.add_argument("--only", choices=sorted(SUITES), default=None)
     ap.add_argument("--quick", action="store_true",
                     help="small sizes / few devices (CI-sized)")
+    ap.add_argument("--update-docs", action="store_true",
+                    help="regenerate the benchmark table in docs/overlap.md "
+                         "from this run's BENCH_quick.json (requires --quick "
+                         "without --only)")
     args = ap.parse_args()
+    if args.update_docs and (not args.quick or args.only):
+        ap.error("--update-docs needs --quick and no --only")
 
     todo = {args.only: SUITES[args.only]} if args.only else SUITES
     records = {}
@@ -153,6 +174,12 @@ def main() -> int:
         path = REPO / "BENCH_quick.json"
         path.write_text(json.dumps(quick, indent=1) + "\n")
         print(f"[bench] wrote {path}")
+        if args.update_docs:
+            from benchmarks import docs_sync
+
+            changed = docs_sync.update_docs(quick)
+            print(f"[bench] docs/overlap.md table "
+                  f"{'updated' if changed else 'already in sync'}")
     return rc
 
 

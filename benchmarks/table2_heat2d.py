@@ -20,30 +20,38 @@ import sys
 from typing import Any, Dict
 
 
-def worker(devices: int, n: int, iters: int) -> Dict[str, Any]:
+def worker(devices: int, n: int, iters: int,
+           mesh_shape: str = "") -> Dict[str, Any]:
     import jax
 
-    from benchmarks._util import timeit
+    from benchmarks._util import parse_mesh_shape, timeit
     from repro.analysis.hlo import parse_collectives
     from repro.core.stencil import heat2d_init, heat2d_solve
-    from repro.launch.mesh import make_mesh
+    from repro.launch.mesh import make_grid_mesh, make_mesh
 
     assert len(jax.devices()) == devices, (len(jax.devices()), devices)
-    mesh = make_mesh((devices,), ("data",))
+    if mesh_shape:
+        rows_, cols_ = parse_mesh_shape(mesh_shape)
+        assert rows_ * cols_ == devices, (mesh_shape, devices)
+        mesh = make_grid_mesh(rows_, cols_)
+        axis = ("rows", "cols")
+    else:
+        mesh = make_mesh((devices,), ("data",))
+        axis = "data"
     u0 = heat2d_init(n, n)
     out: Dict[str, Any] = {"devices": devices, "n": n, "iters": iters}
+    if mesh_shape:
+        out["mesh_shape"] = mesh_shape
     results = {}
     for mode in ("two_phase", "hdot"):
         def solve(u0=u0, mode=mode):
-            return heat2d_solve(u0, mesh, "data", iters, mode=mode)
+            return heat2d_solve(u0, mesh, axis, iters, mode=mode)
 
         sec = timeit(solve)
         u, res = solve()
-        import jax.numpy as jnp
         results[mode] = u
-        import numpy as np
         lowered = jax.jit(
-            lambda u: heat2d_solve(u, mesh, "data", 1, mode=mode)).lower(u0)
+            lambda u: heat2d_solve(u, mesh, axis, 1, mode=mode)).lower(u0)
         coll = parse_collectives(lowered.compile().as_text())
         out[mode] = {
             "seconds": sec,
@@ -60,13 +68,22 @@ def worker(devices: int, n: int, iters: int) -> Dict[str, Any]:
     return out
 
 
-def run(sizes=(1, 2, 4, 8), n: int = 1024, iters: int = 50) -> Dict[str, Any]:
-    from benchmarks._util import run_worker
+def run(sizes=(1, 2, 4, 8), n: int = 1024, iters: int = 50,
+        mesh_shapes=()) -> Dict[str, Any]:
+    """`sizes` drives the legacy 1-D slab rows; `mesh_shapes` — "RxC"
+    strings — adds 2-D (rows x cols) block-decomposition rows, so the 2x2 vs
+    4x1 overlap gap is a tracked trajectory."""
+    from benchmarks._util import parse_mesh_shape, run_worker
 
     rows = [run_worker("benchmarks.table2_heat2d", d,
                        ["--devices", str(d), "--n", str(n),
                         "--iters", str(iters)])
             for d in sizes]
+    for ms in mesh_shapes:
+        r_, c_ = parse_mesh_shape(ms)
+        rows.append(run_worker("benchmarks.table2_heat2d", r_ * c_,
+                               ["--devices", str(r_ * c_), "--n", str(n),
+                                "--iters", str(iters), "--mesh", ms]))
     base = rows[0]
     for r in rows:
         for mode in ("two_phase", "hdot"):
@@ -81,16 +98,19 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--n", type=int, default=1024)
     ap.add_argument("--iters", type=int, default=50)
+    ap.add_argument("--mesh", type=str, default="",
+                    help="RxC 2-D process mesh (e.g. 2x2); empty = 1-D slabs")
     args = ap.parse_args()
     if args.worker:
         from benchmarks._util import emit
 
-        emit(worker(args.devices, args.n, args.iters))
+        emit(worker(args.devices, args.n, args.iters, args.mesh))
         return
     rec = run()
     for r in rec["rows"]:
         tp, hd = r["two_phase"], r["hdot"]
-        print(f"devices={r['devices']} two_phase={tp['sweeps_per_s']:8.1f}/s "
+        print(f"devices={r['devices']} mesh={r.get('mesh_shape', '-'):>5s} "
+              f"two_phase={tp['sweeps_per_s']:8.1f}/s "
               f"hdot={hd['sweeps_per_s']:8.1f}/s "
               f"coll(tp)={tp['coll_ops_per_sweep']} coll(hdot)={hd['coll_ops_per_sweep']} "
               f"identical={r['numerics_identical']}")

@@ -9,7 +9,8 @@
 """
 
 from repro import compat  # noqa: F401  (jax version shims)
-from repro.core.domain import Box, Domain, SubDomain, decompose_grid, halo_cells
+from repro.core.domain import (Box, Domain, SubDomain, decompose_grid,
+                               halo_cells, interior_boxes)
 
 __all__ = [
     "Box",
@@ -17,4 +18,5 @@ __all__ = [
     "SubDomain",
     "decompose_grid",
     "halo_cells",
+    "interior_boxes",
 ]

@@ -205,6 +205,19 @@ class Domain:
         return halo_cells(self.box, self.global_shape, width, dims, periodic)
 
 
+def interior_boxes(shape: Sequence[int], width: int,
+                   grid: Sequence[int]) -> List[Box]:
+    """Task-level reuse of :func:`decompose_grid` on the INTERIOR of a local
+    block: the cells [width, extent-width) per dim are split into a `grid` of
+    chunk boxes (local-block coordinates). This is the 2-D over-decomposition
+    the halo machinery feeds its interior chunk tasks from — the same
+    partition function that cut the process mesh, one level down; the
+    boundary strips (the halo consumers) are exactly the complement."""
+    inner = [max(0, e - 2 * width) for e in shape]
+    shift = (width,) * len(tuple(shape))
+    return [b.shifted(shift) for b in decompose_grid(inner, grid)]
+
+
 def _unravel(i: int, grid: Sequence[int]) -> Tuple[int, ...]:
     out = []
     for g in reversed(list(grid)):

@@ -23,7 +23,14 @@ halos for step k+1 ride a ppermute issued as soon as step k's boundary strips
 are done — i.e. the exchange for the NEXT step is in flight while the CURRENT
 step's interior chunks compute, removing the per-step comm/compute dependency
 chain entirely (one pipeline-fill exchange at the start is the only exposed
-latency).
+latency; the drain step is peeled, so no dead final exchange is issued).
+
+The ``*_2d`` family generalizes the whole scheme to a (rows x cols) process
+mesh: :func:`exchange_halo_2d` moves both axes' face strips (corner-free —
+star stencils only), :func:`stencil_with_halo_2d` splits the block into four
+boundary-strip tasks plus a 2-D interior chunk grid cut by the SAME
+``decompose_grid`` scheme used at process level, and :func:`halo_scan_2d`
+double-buffers both axes' exchanges behind the interior compute.
 
 All functions run inside ``shard_map`` bodies; `axis_name` names the mesh axis
 that carries the process-level domain decomposition for `dim`.
@@ -36,6 +43,8 @@ from typing import Callable, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from repro.core.domain import interior_boxes
 
 
 def _edge(u: jax.Array, dim: int, side: str, width: int) -> jax.Array:
@@ -188,7 +197,8 @@ def halo_scan(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
               periodic: bool = False, mode: str = "hdot",
               subdomains: int = 4,
               step_out_fn: Optional[Callable[[jax.Array, jax.Array], jax.Array]]
-              = None) -> Tuple[jax.Array, Optional[jax.Array]]:
+              = None, unroll: int = 1,
+              peel: bool = True) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Double-buffered multi-step stencil driver (lax.scan over `steps`).
 
     In hdot mode the scan carry is (block, lo_halo, hi_halo): the halos for
@@ -199,25 +209,36 @@ def halo_scan(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
     therefore always in flight behind the current step's interior compute; the
     only exposed latency is the single pipeline-fill exchange before the scan.
 
+    The final step is PEELED out of the scan (pipeline drain): the in-body
+    exchange would feed a step that never runs, so the scan covers steps-1
+    trips and the last step consumes its carried halos without launching a new
+    ppermute pair — one dead exchange per solve saved (``peel=False`` keeps
+    the old drain-in-scan lowering; the regression test counts the ppermutes).
+
     `step_out_fn(u_new, u_old)` optionally produces a per-step output (e.g. a
     residual); its stacked results are returned as the second element (None
     when not provided). Numerics are identical to `steps` iterated calls of
-    :func:`stencil_apply` — asserted in tests.
+    :func:`stencil_apply` — asserted in tests. `unroll` is forwarded to
+    lax.scan (the HLO-inspection tests unroll fully so every exchange is a
+    countable op definition).
     """
     n = u.shape[dim]
-    if mode != "hdot" or n < 4 * width:
-        # two-phase baseline (or degenerate block): plain comm->compute scan
+    if mode != "hdot" or n < 4 * width or steps < 1:
+        # two-phase baseline (or degenerate block / empty scan, which keeps
+        # the length-0 stacked-outs contract): plain comm->compute scan
         def body(u, _):
             u_new = stencil_apply(u, stencil_fn, axis_name, width, dim,
                                   periodic, mode, subdomains)
             return u_new, step_out_fn(u_new, u) if step_out_fn else None
-        return lax.scan(body, u, None, length=steps)
+        return lax.scan(body, u, None, length=steps, unroll=unroll)
+
+    def strips(u, lo_halo, hi_halo):
+        lo_src, hi_src = _boundary_srcs(u, lo_halo, hi_halo, width, dim)
+        return stencil_fn(lo_src), stencil_fn(hi_src)
 
     def body(carry, _):
         u, lo_halo, hi_halo = carry
-        lo_src, hi_src = _boundary_srcs(u, lo_halo, hi_halo, width, dim)
-        lo_out = stencil_fn(lo_src)              # new cells [0, width)
-        hi_out = stencil_fn(hi_src)              # new cells [n-width, n)
+        lo_out, hi_out = strips(u, lo_halo, hi_halo)   # new edge cells
         # The updated block's edge strips ARE lo_out/hi_out — hand them to the
         # ring now so the next step's halos travel while the interior computes.
         lo_next, hi_next = exchange_edges(lo_out, hi_out, axis_name, periodic)
@@ -227,8 +248,260 @@ def halo_scan(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
         return (u_new, lo_next, hi_next), out
 
     lo0, hi0 = exchange_halo(u, axis_name, width, dim, periodic)  # pipeline fill
-    (u, _, _), outs = lax.scan(body, (u, lo0, hi0), None, length=steps)
-    return u, outs
+    if not peel:
+        (u, _, _), outs = lax.scan(body, (u, lo0, hi0), None, length=steps,
+                                   unroll=unroll)
+        return u, outs
+    (u, lo_h, hi_h), outs = lax.scan(body, (u, lo0, hi0), None,
+                                     length=steps - 1, unroll=unroll)
+    # Peeled drain: the last step consumes its halos, launches nothing.
+    u_new = stencil_with_halo(u, lo_h, hi_h, stencil_fn, width, dim,
+                              subdomains)
+    if step_out_fn is not None:
+        outs = jax.tree.map(
+            lambda s, o: jnp.concatenate([s, o[None]], axis=0), outs,
+            step_out_fn(u_new, u))
+    return u_new, outs
+
+
+# --------------------------------------------------------------------------
+# 2-D (rows x cols) process decomposition — corner-free two-dim pipelining.
+#
+# The same interior/boundary over-decomposition, applied on BOTH mesh axes at
+# once: a block owns four edge strips (d0-lo/hi spanning the full d1 extent,
+# d1-lo/hi covering the remaining interior rows) and a 2-D grid of interior
+# chunk tasks cut by the SAME `decompose_grid` scheme the process level uses
+# (paper §3.2: one partition function, two levels). Corner ghosts are never
+# exchanged: `stencil_fn` must be star-shaped (5-point Jacobi, per-direction
+# WENO, ...), so the corner cells of the padded source are dead values.
+#
+# `stencil_fn(padded)` here consumes a block padded by `width` ghost cells on
+# both ends of BOTH dims in `dims` and returns the un-padded update.
+# --------------------------------------------------------------------------
+
+def _sl(u: jax.Array, dim: int, a: int, b: int) -> jax.Array:
+    return lax.slice_in_dim(u, a, b, axis=dim)
+
+
+def exchange_halo_2d(u: jax.Array, axis_names: Tuple[str, str], width: int,
+                     dims: Tuple[int, int], periodic: bool = False
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Combined edge exchange on both mesh axes (one ppermute pair per axis).
+    Returns (lo0, hi0, lo1, hi1); corner ghosts are NOT exchanged."""
+    lo0, hi0 = exchange_halo(u, axis_names[0], width, dims[0], periodic)
+    lo1, hi1 = exchange_halo(u, axis_names[1], width, dims[1], periodic)
+    return lo0, hi0, lo1, hi1
+
+
+def pad_with_halo_2d(u: jax.Array, halos, width: int, dims: Tuple[int, int]
+                     ) -> jax.Array:
+    """Assemble the corner-free padded block: halos on the four faces, ZEROS
+    in the (2*width)^2 corners (star stencils never read them)."""
+    d0, d1 = dims
+    lo0, hi0, lo1, hi1 = halos
+    shp = list(u.shape)
+    shp[d0] = width
+    shp[d1] = width
+    zc = jnp.zeros(shp, u.dtype)
+    mid = jnp.concatenate([lo1, u, hi1], axis=d1)
+    top = jnp.concatenate([zc, lo0, zc], axis=d1)
+    bot = jnp.concatenate([zc, hi0, zc], axis=d1)
+    return jnp.concatenate([top, mid, bot], axis=d0)
+
+
+def stencil_two_phase_2d(u: jax.Array,
+                         stencil_fn: Callable[[jax.Array], jax.Array],
+                         axis_names: Tuple[str, str], width: int,
+                         dims: Tuple[int, int], periodic: bool = False
+                         ) -> jax.Array:
+    """comm(both axes); barrier; compute(whole block) — the 2-D baseline."""
+    halos = exchange_halo_2d(u, axis_names, width, dims, periodic)
+    return stencil_fn(pad_with_halo_2d(u, halos, width, dims))
+
+
+def _norm_sub2(subdomains) -> Tuple[int, int]:
+    if isinstance(subdomains, int):
+        return (subdomains, subdomains)
+    kr, kc = subdomains
+    return (kr, kc)
+
+
+def _strips_2d(u: jax.Array, lo0, hi0, lo1, hi1,
+               stencil_fn: Callable[[jax.Array], jax.Array], width: int,
+               dims: Tuple[int, int]) -> Tuple[jax.Array, ...]:
+    """The four boundary-strip tasks — the ONLY consumers of the halos.
+
+    Partition of the block: d0 strips own rows [0,w) and [n-w,n) at full d1
+    extent; d1 strips own the remaining rows x cols [0,w) / [m-w,m); the
+    interior owns the rest. The d1-strip sources span all of u's rows, so
+    they consume only the d1 halo — each strip depends on exactly one
+    ppermute pair (plus zero corner ghosts, dead for star stencils)."""
+    d0, d1 = dims
+    w = width
+    n, m = u.shape[d0], u.shape[d1]
+    shp = list(u.shape)
+    shp[d0] = w
+    shp[d1] = w
+    zc = jnp.zeros(shp, u.dtype)
+    rows = jnp.concatenate([lo0, _sl(u, d0, 0, 2 * w)], axis=d0)
+    lpad = jnp.concatenate([zc, _sl(lo1, d0, 0, 2 * w)], axis=d0)
+    rpad = jnp.concatenate([zc, _sl(hi1, d0, 0, 2 * w)], axis=d0)
+    lo0_out = stencil_fn(jnp.concatenate([lpad, rows, rpad], axis=d1))
+    rows = jnp.concatenate([_sl(u, d0, n - 2 * w, n), hi0], axis=d0)
+    lpad = jnp.concatenate([_sl(lo1, d0, n - 2 * w, n), zc], axis=d0)
+    rpad = jnp.concatenate([_sl(hi1, d0, n - 2 * w, n), zc], axis=d0)
+    hi0_out = stencil_fn(jnp.concatenate([lpad, rows, rpad], axis=d1))
+    lo1_out = stencil_fn(jnp.concatenate([lo1, _sl(u, d1, 0, 2 * w)], axis=d1))
+    hi1_out = stencil_fn(jnp.concatenate([_sl(u, d1, m - 2 * w, m), hi1], axis=d1))
+    return lo0_out, hi0_out, lo1_out, hi1_out
+
+
+def _interior_chunks_2d(u: jax.Array,
+                        stencil_fn: Callable[[jax.Array], jax.Array],
+                        width: int, dims: Tuple[int, int],
+                        subdomains: Tuple[int, int]) -> jax.Array:
+    """Interior cells [w, n-w) x [w, m-w) as a (kr x kc) grid of independent
+    chunk tasks, cut by `decompose_grid` — the process-level partition scheme
+    reused at task level. Chunk [a,b)x[c,d) reads only u[a:b+2w, c:d+2w]
+    (its subdomain plus ghosts), so chunks are disjoint work the scheduler
+    interleaves with both axes' ppermutes."""
+    d0, d1 = dims
+    w = width
+    n, m = u.shape[d0], u.shape[d1]
+    ni, mi = n - 2 * w, m - 2 * w
+    kr, kc = _norm_sub2(subdomains)
+    kr = max(1, min(kr, ni // max(1, 2 * w)))   # keep chunks >= 2*width
+    kc = max(1, min(kc, mi // max(1, 2 * w)))
+    boxes = interior_boxes((n, m), w, (kr, kc))  # row-major, block coords
+    rows = []
+    for r in range(kr):
+        row = []
+        for c in range(kc):
+            b = boxes[r * kc + c]
+            src = _sl(_sl(u, d0, b.start[0] - w, b.stop[0] + w),
+                      d1, b.start[1] - w, b.stop[1] + w)
+            row.append(stencil_fn(src))
+        rows.append(row[0] if kc == 1 else jnp.concatenate(row, axis=d1))
+    return rows[0] if kr == 1 else jnp.concatenate(rows, axis=d0)
+
+
+def _assemble_2d(strips, interior: jax.Array, dims: Tuple[int, int]
+                 ) -> jax.Array:
+    lo0_out, hi0_out, lo1_out, hi1_out = strips
+    d0, d1 = dims
+    mid = jnp.concatenate([lo1_out, interior, hi1_out], axis=d1)
+    return jnp.concatenate([lo0_out, mid, hi0_out], axis=d0)
+
+
+def stencil_with_halo_2d(u: jax.Array, halos,
+                         stencil_fn: Callable[[jax.Array], jax.Array],
+                         width: int, dims: Tuple[int, int],
+                         subdomains=(2, 2)) -> jax.Array:
+    """Communication-free half of the 2-D hdot schedule: apply `stencil_fn`
+    to a block whose four face halos were ALREADY received."""
+    d0, d1 = dims
+    if u.shape[d0] < 4 * width or u.shape[d1] < 4 * width:
+        return stencil_fn(pad_with_halo_2d(u, halos, width, dims))
+    strips = _strips_2d(u, *halos, stencil_fn, width, dims)
+    interior = _interior_chunks_2d(u, stencil_fn, width, dims, subdomains)
+    return _assemble_2d(strips, interior, dims)
+
+
+def stencil_hdot_2d(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
+                    axis_names: Tuple[str, str], width: int,
+                    dims: Tuple[int, int], periodic: bool = False,
+                    subdomains=(2, 2)) -> jax.Array:
+    """2-D interior/boundary over-decomposition: four strip tasks consume the
+    two ppermute pairs; the (kr x kc) interior chunk grid depends only on u."""
+    d0, d1 = dims
+    if u.shape[d0] < 4 * width or u.shape[d1] < 4 * width:
+        return stencil_two_phase_2d(u, stencil_fn, axis_names, width, dims,
+                                    periodic)
+    halos = exchange_halo_2d(u, axis_names, width, dims, periodic)
+    return stencil_with_halo_2d(u, halos, stencil_fn, width, dims, subdomains)
+
+
+def stencil_apply_2d(u: jax.Array,
+                     stencil_fn: Callable[[jax.Array], jax.Array],
+                     axis_names: Tuple[str, str], width: int,
+                     dims: Tuple[int, int], periodic: bool = False,
+                     mode: str = "hdot", subdomains=(2, 2)) -> jax.Array:
+    if mode == "hdot":
+        return stencil_hdot_2d(u, stencil_fn, axis_names, width, dims,
+                               periodic, subdomains)
+    if mode in ("none", "two_phase"):
+        return stencil_two_phase_2d(u, stencil_fn, axis_names, width, dims,
+                                    periodic)
+    raise ValueError(f"unknown overlap mode {mode!r}")
+
+
+def halo_scan_2d(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
+                 axis_names: Tuple[str, str], width: int,
+                 dims: Tuple[int, int], steps: int, periodic: bool = False,
+                 mode: str = "hdot", subdomains=(2, 2),
+                 step_out_fn: Optional[Callable[[jax.Array, jax.Array],
+                                                jax.Array]] = None,
+                 unroll: int = 1, peel: bool = True
+                 ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Double-buffered multi-step driver on a (rows x cols) mesh.
+
+    The hdot carry is (block, four face halos). Each step: (1) finish the
+    four boundary strips — the only halo consumers; (2) IMMEDIATELY launch
+    BOTH axes' ppermute pairs for step k+1 (the new block's d0 edges are
+    exactly the d0 strips; its d1 edges are the d1 strips plus the strip
+    corners, stitched corner-free); (3) only then chew through the 2-D
+    interior chunk grid. Both exchanges are therefore always in flight behind
+    the interior compute; the drain step is peeled exactly like
+    :func:`halo_scan`. Numerics identical to `steps` iterated
+    :func:`stencil_apply_2d` calls — asserted in tests."""
+    d0, d1 = dims
+    w = width
+    n, m = u.shape[d0], u.shape[d1]
+    if mode != "hdot" or n < 4 * w or m < 4 * w or steps < 1:
+        def body(u, _):
+            u_new = stencil_apply_2d(u, stencil_fn, axis_names, w, dims,
+                                     periodic, mode, subdomains)
+            return u_new, step_out_fn(u_new, u) if step_out_fn else None
+        return lax.scan(body, u, None, length=steps, unroll=unroll)
+
+    a0, a1 = axis_names
+
+    def exchange_from_strips(strips):
+        lo0_out, hi0_out, lo1_out, hi1_out = strips
+        lo0n, hi0n = exchange_edges(lo0_out, hi0_out, a0, periodic)
+        # the new block's d1 edges: strip-corner segments stitched around the
+        # d1 strips — still built from strips alone, so both ppermute pairs
+        # depart before any interior chunk is touched
+        lo_e = jnp.concatenate([_sl(lo0_out, d1, 0, w), lo1_out,
+                                _sl(hi0_out, d1, 0, w)], axis=d0)
+        hi_e = jnp.concatenate([_sl(lo0_out, d1, m - w, m), hi1_out,
+                                _sl(hi0_out, d1, m - w, m)], axis=d0)
+        lo1n, hi1n = exchange_edges(lo_e, hi_e, a1, periodic)
+        return lo0n, hi0n, lo1n, hi1n
+
+    def body(carry, _):
+        u, halos = carry
+        strips = _strips_2d(u, *halos, stencil_fn, w, dims)
+        halos_next = exchange_from_strips(strips)
+        interior = _interior_chunks_2d(u, stencil_fn, w, dims, subdomains)
+        u_new = _assemble_2d(strips, interior, dims)
+        out = step_out_fn(u_new, u) if step_out_fn else None
+        return (u_new, halos_next), out
+
+    halos0 = exchange_halo_2d(u, axis_names, w, dims, periodic)  # fill
+    if not peel:
+        (u, _), outs = lax.scan(body, (u, halos0), None, length=steps,
+                                unroll=unroll)
+        return u, outs
+    (u, halos), outs = lax.scan(body, (u, halos0), None, length=steps - 1,
+                                unroll=unroll)
+    # peeled drain: consume the carried halos, launch nothing
+    u_new = stencil_with_halo_2d(u, halos, stencil_fn, w, dims, subdomains)
+    if step_out_fn is not None:
+        outs = jax.tree.map(
+            lambda s, o: jnp.concatenate([s, o[None]], axis=0), outs,
+            step_out_fn(u_new, u))
+    return u_new, outs
 
 
 def multi_dim_stencil(u: jax.Array,

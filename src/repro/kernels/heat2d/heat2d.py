@@ -30,17 +30,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(c_ref, n_ref, s_ref, w_ref, e_ref, o_ref, *,
+def _kernel(c_ref, n_ref, s_ref, w_ref, e_ref,
+            hn_ref, hs_ref, hw_ref, he_ref, o_ref, *,
             sweeps: int, tx: int, ty: int, gx: int, gy: int):
     i = pl.program_id(0)
     j = pl.program_id(1)
 
     u = c_ref[...].astype(jnp.float32)                      # (tx, ty)
-    # halo strips from neighbor tiles; zero at the global boundary
-    north = jnp.where(i > 0, n_ref[...].astype(jnp.float32), 0.0)     # (1, ty)
-    south = jnp.where(i < gx - 1, s_ref[...].astype(jnp.float32), 0.0)
-    west = jnp.where(j > 0, w_ref[...].astype(jnp.float32), 0.0)      # (tx, 1)
-    east = jnp.where(j < gy - 1, e_ref[...].astype(jnp.float32), 0.0)
+    # halo strips from neighbor tiles; at the block edge the strip comes from
+    # the caller-supplied halo ring instead (zeros = global Dirichlet, or a
+    # neighbor SHARD's edge when the block is one subdomain of a 2-D mesh —
+    # both axes stage strips, at tile level and at process level)
+    north = jnp.where(i > 0, n_ref[...].astype(jnp.float32),          # (1, ty)
+                      hn_ref[...].astype(jnp.float32))
+    south = jnp.where(i < gx - 1, s_ref[...].astype(jnp.float32),
+                      hs_ref[...].astype(jnp.float32))
+    west = jnp.where(j > 0, w_ref[...].astype(jnp.float32),           # (tx, 1)
+                     hw_ref[...].astype(jnp.float32))
+    east = jnp.where(j < gy - 1, e_ref[...].astype(jnp.float32),
+                     he_ref[...].astype(jnp.float32))
 
     ii = jax.lax.broadcasted_iota(jnp.int32, (tx, ty), 0)
     jj = jax.lax.broadcasted_iota(jnp.int32, (tx, ty), 1)
@@ -62,14 +70,30 @@ def _kernel(c_ref, n_ref, s_ref, w_ref, e_ref, o_ref, *,
 
 
 def heat2d_sweep_pallas(u: jax.Array, tile: tuple = (256, 256),
-                        sweeps: int = 1, interpret: bool = False) -> jax.Array:
-    """u: (nx, ny) local block (no ghosts; global Dirichlet-0 boundary).
-    Tiles are the task-level subdomains; across tiles the sweep is block-Jacobi
-    exactly like the paper's per-task Gauss-Seidel blocks."""
+                        sweeps: int = 1, interpret: bool = False,
+                        halo: tuple | None = None) -> jax.Array:
+    """u: (nx, ny) local block (no ghosts). Tiles are the task-level
+    subdomains; across tiles the sweep is block-Jacobi exactly like the
+    paper's per-task Gauss-Seidel blocks.
+
+    `halo=(north, south, west, east)` optionally supplies the block-level
+    ghost ring — shapes (1, ny), (1, ny), (nx, 1), (nx, 1) — staged into the
+    edge tiles as their outer strips (frozen for all `sweeps`, matching the
+    tile-level block-Jacobi semantics). This is how a (rows x cols) process
+    mesh reuses the kernel per shard: the corner-free 2-D exchange delivers
+    both axes' edge strips and the kernel stages them exactly like the
+    interior tiles' strips. Default None = zeros = global Dirichlet-0."""
     nx, ny = u.shape
     tx, ty = min(tile[0], nx), min(tile[1], ny)
     assert nx % tx == 0 and ny % ty == 0, (u.shape, tile)
     gx, gy = nx // tx, ny // ty
+    if halo is None:
+        hn = hs = jnp.zeros((1, ny), u.dtype)
+        hw = he = jnp.zeros((nx, 1), u.dtype)
+    else:
+        hn, hs, hw, he = halo
+        assert hn.shape == hs.shape == (1, ny), (hn.shape, hs.shape)
+        assert hw.shape == he.shape == (nx, 1), (hw.shape, he.shape)
 
     kernel = functools.partial(_kernel, sweeps=sweeps, tx=tx, ty=ty, gx=gx, gy=gy)
 
@@ -79,7 +103,8 @@ def heat2d_sweep_pallas(u: jax.Array, tile: tuple = (256, 256),
     # Strip block shapes address single rows/columns, so their index maps work
     # in units of one row (resp. column): the north strip is absolute row
     # i*tx - 1 (the last row of tile (i-1, j)), the west strip is absolute
-    # column j*ty - 1. Edge tiles clamp into the domain and mask in-kernel.
+    # column j*ty - 1. Edge tiles clamp into the domain and mask in-kernel
+    # (selecting the caller-supplied halo ring instead).
     return pl.pallas_call(
         kernel,
         grid=(gx, gy),
@@ -89,8 +114,12 @@ def heat2d_sweep_pallas(u: jax.Array, tile: tuple = (256, 256),
             pl.BlockSpec((1, ty), lambda i, j: (clamp((i + 1) * tx, nx - 1), j)),
             pl.BlockSpec((tx, 1), lambda i, j: (i, clamp(j * ty - 1, ny - 1))),
             pl.BlockSpec((tx, 1), lambda i, j: (i, clamp((j + 1) * ty, ny - 1))),
+            pl.BlockSpec((1, ty), lambda i, j: (0, j)),
+            pl.BlockSpec((1, ty), lambda i, j: (0, j)),
+            pl.BlockSpec((tx, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((tx, 1), lambda i, j: (i, 0)),
         ],
         out_specs=pl.BlockSpec((tx, ty), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((nx, ny), u.dtype),
         interpret=interpret,
-    )(u, u, u, u, u)
+    )(u, u, u, u, u, hn, hs, hw, he)

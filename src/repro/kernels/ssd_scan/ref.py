@@ -30,7 +30,17 @@ def ssd_chunk_terms(xc, dtc, A, Bc, Cc):
     """Per-chunk quantities. Shapes (b=batch, c=chunks, q=chunk, h, p, n):
        xc (b,c,q,h,p)  dtc (b,c,q,h)  A (h,)  Bc,Cc (b,c,q,n)
     Returns Y_diag (b,c,q,h,p), states (b,c,h,p,n), decays:
-       decay_chunk (b,c,h)  decay_in (b,c,q,h)."""
+       decay_chunk (b,c,h)  decay_in (b,c,q,h).
+
+    All terms accumulate in f32 regardless of input dtype (matching the
+    Pallas kernel): with bf16 intermediates, XLA-CPU's threaded reduction
+    order makes the low bits run-to-run dependent, which showed up as the
+    mamba2 prefill/decode flake — f32 accumulation keeps that noise ~2^-23,
+    orders of magnitude under every tolerance."""
+    xc = xc.astype(jnp.float32)
+    dtc = dtc.astype(jnp.float32)
+    Bc = Bc.astype(jnp.float32)
+    Cc = Cc.astype(jnp.float32)
     dA = dtc * A                                                   # (b,c,q,h)
     L = jnp.exp(segsum(jnp.moveaxis(dA, -1, -2)))                  # (b,c,h,q,q)
     att = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)                    # (b,c,q,k)
@@ -85,8 +95,10 @@ def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
             step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(decay_chunk, 1, 0)))
         prev_states = jnp.moveaxis(prev_states, 0, 1)
 
-    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc,
-                       prev_states.astype(x.dtype), decay_in.astype(x.dtype))
+    # off-diagonal term in f32 too: downcasting the states/decays to bf16
+    # here was the other half of the flake's noise floor
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc.astype(jnp.float32),
+                       prev_states, decay_in)
     y = (y_diag + y_off).reshape(b, l, h, p).astype(x.dtype)
     return y, final
 

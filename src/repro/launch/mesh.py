@@ -41,6 +41,20 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
     return jax.make_mesh(shape, axes, **_auto_kw(len(axes)))
 
 
+GRID_AXES = ("rows", "cols")
+
+
+def make_grid_mesh(rows: int, cols: int,
+                   axes: Tuple[str, str] = GRID_AXES) -> Mesh:
+    """(rows x cols) process mesh for 2-D domain decomposition (the HDOT
+    partition scheme applied on both grid dims at process level; the halo
+    machinery reuses the same scheme for its task-level chunk grid). A
+    trailing size-1 axis keeps the full 2-D code path alive on 1-D layouts —
+    (4, 1) and (1, 4) are the slab topologies expressed in the 2-D scheme,
+    so benchmarks can track the 2x2-vs-4x1 overlap gap on equal footing."""
+    return jax.make_mesh((rows, cols), axes, **_auto_kw(2))
+
+
 def make_single_device_mesh(axes: Tuple[str, ...] = ("data", "model")) -> Mesh:
     """1-device mesh with the production axis names: lets the full sharded
     code path run on one CPU device (every axis has size 1)."""

@@ -1,0 +1,73 @@
+"""First-class docs stay truthful: README/docs exist, and the benchmark
+table committed in docs/overlap.md is EXACTLY what benchmarks.docs_sync
+renders from the committed BENCH_quick.json (regenerate both with
+``python -m benchmarks.run --quick --update-docs``). Fast, non-slow."""
+from __future__ import annotations
+
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def test_readme_exists_and_covers_the_basics():
+    text = (REPO / "README.md").read_text()
+    # quickstart commands must mention the tier-1 verify + bench invocations
+    assert "python -m pytest -x -q" in text
+    assert "python -m benchmarks.run" in text
+    # the paper-concept -> module map must point at the real modules
+    for mod in ("core/halo.py", "core/domain.py", "core/reduction.py",
+                "runtime/trainer.py", "launch/mesh.py"):
+        assert mod in text, f"README concept map lost {mod}"
+
+
+def test_overlap_doc_exists_and_names_the_knobs():
+    text = (REPO / "docs" / "overlap.md").read_text()
+    for knob in ("two_phase", "hdot", "subdomains", "grad_buckets",
+                 "halo_scan_2d", "make_grid_mesh"):
+        assert knob in text, f"docs/overlap.md lost {knob}"
+
+
+def test_bench_table_not_stale():
+    """The generated table region must match a fresh render of the committed
+    BENCH_quick.json — fails when one is updated without the other."""
+    from benchmarks import docs_sync
+
+    quick = docs_sync.load_quick()
+    committed = docs_sync.docs_table()
+    assert committed is not None, "docs/overlap.md lost its BENCH_TABLE markers"
+    rendered = docs_sync.render_table(quick)
+    assert committed == rendered, (
+        "docs/overlap.md benchmark table is stale relative to "
+        "BENCH_quick.json — run `python -m benchmarks.run --quick "
+        "--update-docs` and commit both")
+
+
+def test_bench_quick_tracks_2d_mesh_rows():
+    """The committed trajectory must include `mesh_shape` rows for heat2d and
+    hpccg (the 2x2-vs-4x1 overlap gap is tracked from PR 3 onward)."""
+    from benchmarks import docs_sync
+
+    quick = docs_sync.load_quick()
+    for suite in ("heat2d", "hpccg"):
+        rows = quick[suite]["rows"]
+        meshes = {r.get("mesh_shape") for r in rows if "mesh_shape" in r}
+        assert {"2x2", "4x1"} <= meshes, (suite, meshes)
+
+
+def test_render_table_shape():
+    from benchmarks import docs_sync
+
+    quick = {"demo": {"rows": [
+        {"devices": 4, "mesh_shape": "2x2", "metric": "sweeps_per_s",
+         "two_phase": 10.0, "hdot": 8.0, "hdot_two_phase_ratio": 0.8},
+        {"devices": 2, "metric": "sweeps_per_s",
+         "two_phase": 5.0, "hdot": 5.5, "hdot_two_phase_ratio": 1.1},
+    ]}, "broken": {"error": "boom"}}
+    table = docs_sync.render_table(quick)
+    lines = table.splitlines()
+    assert lines[0].startswith("| suite ")
+    assert "| demo | 4 | 2x2 | sweeps_per_s | 10.00 | 8.00 | 0.80x |" in lines
+    assert "| demo | 2 | - | sweeps_per_s | 5.00 | 5.50 | 1.10x |" in lines
+    assert any("ERROR" in ln for ln in lines)

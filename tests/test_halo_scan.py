@@ -119,6 +119,28 @@ def test_stencil_with_halo_uses_given_halos(data_mesh):
                                rtol=1e-6, atol=1e-7)
 
 
+def test_halo_scan_peel_numerics_identical(data_mesh):
+    """Peeling the drain step is schedule-only: bit-identical results and
+    per-step outputs vs the unpeeled scan (the ppermute-count drop itself
+    needs a real multi-device axis — asserted in test_system.py)."""
+    u = jax.random.normal(jax.random.PRNGKey(7), (32, 4), jnp.float32)
+
+    def run(peel):
+        return jax.jit(jax.shard_map(
+            lambda x: halo_scan(x, _avg3, "data", 1, 0, 5, periodic=True,
+                                peel=peel,
+                                step_out_fn=lambda new, old: jax.lax.pmax(
+                                    jnp.max(new), "data")),
+            mesh=data_mesh, in_specs=(P("data"),),
+            out_specs=(P("data"), P())))(u)
+
+    u_p, outs_p = run(True)
+    u_n, outs_n = run(False)
+    np.testing.assert_array_equal(np.asarray(u_p), np.asarray(u_n))
+    assert outs_p.shape == outs_n.shape == (5,)
+    np.testing.assert_array_equal(np.asarray(outs_p), np.asarray(outs_n))
+
+
 def test_exchange_edges_single_rank(data_mesh):
     """Size-1 axis: periodic wraps own edges, non-periodic returns zeros."""
     u = jnp.arange(12.0).reshape(6, 2)

@@ -261,3 +261,135 @@ def test_halo_scan_4dev_equals_iterated_apply():
     """
     r = run_devices(code, 4)
     assert r == {"False": True, "True": True}
+
+
+@pytest.mark.slow
+def test_heat2d_2d_meshes_match_1dev_oracle():
+    """2x2 / 4x1 / 1x4 (rows x cols) block decompositions give the SAME field
+    and residual history as the 1-device two-phase oracle, both schedules —
+    corner correctness included (the corner cells of each shard are computed
+    from corner-free face exchanges). Odd shard sizes via a 66x70 grid."""
+    code = """
+    import json, jax, numpy as np
+    from repro.core.stencil import heat2d_init, heat2d_solve
+    from repro.launch.mesh import make_grid_mesh, make_mesh
+    u0 = heat2d_init(64, 64)
+    ref, rres = heat2d_solve(u0, make_mesh((1,), ("data",)), "data", 10,
+                             mode="two_phase")
+    ok = {}
+    for rc in ((2, 2), (4, 1), (1, 4)):
+        mesh = make_grid_mesh(*rc)
+        for mode in ("two_phase", "hdot"):
+            u, res = heat2d_solve(u0, mesh, ("rows", "cols"), 10, mode=mode)
+            ok[f"{rc[0]}x{rc[1]}-{mode}"] = bool(
+                np.allclose(np.asarray(u), np.asarray(ref), rtol=1e-5, atol=1e-6)
+                and np.allclose(np.asarray(res), np.asarray(rres), rtol=1e-4))
+    u0b = heat2d_init(66, 70)   # odd 33x35 shards on 2x2
+    refb, _ = heat2d_solve(u0b, make_mesh((1,), ("data",)), "data", 7,
+                           mode="two_phase")
+    ub, _ = heat2d_solve(u0b, make_grid_mesh(2, 2), ("rows", "cols"), 7,
+                         mode="hdot")
+    ok["odd"] = bool(np.allclose(np.asarray(ub), np.asarray(refb),
+                                 rtol=1e-5, atol=1e-6))
+    print(json.dumps(ok))
+    """
+    r = run_devices(code, 4)
+    assert all(r.values()), r
+
+
+@pytest.mark.slow
+def test_hpccg_2d_mesh_matches_1dev_oracle():
+    """CG on (y, z) 2-D row blocks: the 27-point corner couplings ride the
+    sequential two-hop exchange — convergence identical to 1 device."""
+    code = """
+    import json, jax, jax.numpy as jnp, numpy as np
+    from repro.core.stencil import hpccg_solve
+    from repro.launch.mesh import make_grid_mesh, make_mesh
+    b = jax.random.normal(jax.random.PRNGKey(2), (12, 16, 16), jnp.float32)
+    _, href = hpccg_solve(b, make_mesh((1,), ("data",)), "data", 20,
+                          mode="two_phase")
+    ok = {}
+    for rc in ((2, 2), (4, 1), (1, 4)):
+        for mode in ("two_phase", "hdot"):
+            _, h = hpccg_solve(b, make_grid_mesh(*rc), ("rows", "cols"), 20,
+                               mode=mode)
+            ok[f"{rc[0]}x{rc[1]}-{mode}"] = bool(
+                np.allclose(np.asarray(h), np.asarray(href), rtol=1e-3))
+    print(json.dumps(ok))
+    """
+    r = run_devices(code, 4)
+    assert all(r.values()), r
+
+
+@pytest.mark.slow
+def test_heat2d_kernel_sharded_2x2_matches_unsharded():
+    """Pallas tile kernel under a 2x2 mesh (exchanged halo ring staged as
+    block-edge strips) == the unsharded kernel with the same tile grid."""
+    code = """
+    import json, jax, jax.numpy as jnp, numpy as np
+    from repro.kernels.heat2d import ops as heat_ops
+    from repro.launch.mesh import make_grid_mesh
+    u = jax.random.normal(jax.random.PRNGKey(0), (64, 64), jnp.float32)
+    want = heat_ops.heat2d_sweep(u, tile=(32, 32), sweeps=3, impl="ref")
+    got = heat_ops.heat2d_sweep_sharded(u, make_grid_mesh(2, 2),
+                                        ("rows", "cols"), tile=(32, 32),
+                                        sweeps=3, impl="ref")
+    print(json.dumps({"same": bool(np.allclose(np.asarray(got),
+                                               np.asarray(want),
+                                               rtol=1e-6, atol=1e-6))}))
+    """
+    r = run_devices(code, 4)
+    assert r == {"same": True}
+
+
+@pytest.mark.slow
+def test_halo_scan_peeled_ppermute_count_4dev():
+    """The drain-step peel drops one ppermute pair per solve. Fully unrolled,
+    a steps-step hdot scan compiles to exactly 2*steps collective-permutes
+    (fill pair + steps-1 in-flight pairs) — the unpeeled schedule issues
+    2*(steps+1) (XLA reaps the dead pair only when unrolled; the production
+    while-loop lowering executes it, which is what the peel removes). At
+    steps=2 the peeled scan inlines (length-1 scan, no `while` at all) while
+    the unpeeled one keeps a loop just to run the drain trip. The same holds
+    for halo_scan_2d with two pairs (both axes) per step."""
+    code = """
+    import json, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.analysis.hlo import count_ops
+    from repro.core.halo import halo_scan, halo_scan_2d
+    from repro.launch.mesh import make_grid_mesh, make_mesh
+    mesh = make_mesh((4,), ("data",))
+    mesh2 = make_grid_mesh(2, 2)
+    avg3 = lambda p: (p[:-2] + p[1:-1] + p[2:]) / 3.0
+    star = lambda p: (p[1:-1, 1:-1] + p[:-2, 1:-1] + p[2:, 1:-1]
+                      + p[1:-1, :-2] + p[1:-1, 2:]) / 5.0
+    def lower1(steps, peel, unroll=1):
+        f = jax.jit(jax.shard_map(
+            lambda x: halo_scan(x, avg3, "data", 1, 0, steps, periodic=True,
+                                peel=peel, unroll=unroll)[0],
+            mesh=mesh, in_specs=(P("data"),), out_specs=P("data")))
+        return f.lower(jnp.ones((16, 4), jnp.float32)).compile().as_text()
+    def lower2(steps, peel, unroll=1):
+        f = jax.jit(jax.shard_map(
+            lambda x: halo_scan_2d(x, star, ("rows", "cols"), 1, (0, 1),
+                                   steps, periodic=True, peel=peel,
+                                   unroll=unroll)[0],
+            mesh=mesh2, in_specs=(P("rows", "cols"),),
+            out_specs=P("rows", "cols")))
+        return f.lower(jnp.ones((16, 16), jnp.float32)).compile().as_text()
+    out = {}
+    out["unrolled_eq_2steps"] = all(
+        count_ops(lower1(s, peel=True, unroll=s), "collective-permute")
+        == 2 * s for s in (2, 4))
+    out["peeled_no_while"] = count_ops(lower1(2, True), "while") == 0
+    out["unpeeled_while"] = count_ops(lower1(2, False), "while") == 1
+    # 2-D: two pairs per step (one per axis) -> fully-unrolled peeled count
+    # is 4*steps; the scan-lowered (while) form keeps both pairs in the body
+    out["unrolled_2d_eq_4steps"] = all(
+        count_ops(lower2(s, peel=True, unroll=s), "collective-permute")
+        == 4 * s for s in (2, 3))
+    out["peeled_2d_no_while"] = count_ops(lower2(2, True), "while") == 0
+    print(json.dumps(out))
+    """
+    r = run_devices(code, 4)
+    assert all(r.values()), r
