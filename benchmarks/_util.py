@@ -7,22 +7,38 @@ see 1 CPU device).
 from __future__ import annotations
 
 import json
+import math
 import os
 import subprocess
 import sys
 import time
 from pathlib import Path
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 REPO = Path(__file__).resolve().parents[1]
 RESULTS = REPO / "results" / "bench"
 
 
 def parse_mesh_shape(mesh_shape: str) -> tuple:
-    """'RxC' -> (R, C) for the 2-D (rows x cols) benchmark topologies."""
-    r, c = (int(s) for s in mesh_shape.split("x"))
-    assert r >= 1 and c >= 1, mesh_shape
-    return r, c
+    """'RxC' -> (R, C), 'PxRxC' -> (P, R, C): the 2-D (rows x cols) and 3-D
+    (planes x rows x cols) benchmark topologies."""
+    parts = tuple(int(s) for s in mesh_shape.split("x"))
+    assert len(parts) in (2, 3) and all(p >= 1 for p in parts), mesh_shape
+    return parts
+
+
+def mesh_devices(mesh_shape: str) -> int:
+    return math.prod(parse_mesh_shape(mesh_shape))
+
+
+def env_info() -> Dict[str, Any]:
+    """Provenance stamped onto every worker record (and threaded into the
+    committed BENCH_quick.json rows): artifacts from different CI runners are
+    only comparable if the toolchain and device count are recorded."""
+    import jax
+
+    return {"jax_version": jax.__version__,
+            "device_count": jax.device_count()}
 
 
 def run_worker(module: str, devices: int, args: List[str],
@@ -41,8 +57,11 @@ def run_worker(module: str, devices: int, args: List[str],
 
 
 def emit(obj: Dict[str, Any]) -> None:
-    """Worker-side: print the result record as the last stdout line."""
-    print(json.dumps(obj))
+    """Worker-side: print the result record as the last stdout line, stamped
+    with the worker's toolchain/device provenance (:func:`env_info`)."""
+    rec = env_info()
+    rec.update(obj)  # the worker's own keys win on collision
+    print(json.dumps(rec))
 
 
 def save(name: str, record: Dict[str, Any]) -> Path:

@@ -1,0 +1,59 @@
+"""CI gate on the committed overlap trajectory.
+
+Reads BENCH_quick.json (as written by ``python -m benchmarks.run --quick``)
+and FAILS (exit 1) when any suite's headline ``hdot_two_phase_ratio*`` drops
+below ``--min-ratio`` — i.e. when the HDOT schedule has become slower than
+the two-phase baseline it exists to beat. Suites that errored fail the gate
+outright.
+
+Run:  python -m benchmarks.ci_gate [--min-ratio 1.0] [--path BENCH_quick.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from benchmarks._util import REPO
+
+HEADLINE_KEYS = ("hdot_two_phase_ratio", "hdot_two_phase_ratio_2d",
+                 "hdot_two_phase_ratio_3d")
+
+
+def check(quick: dict, min_ratio: float) -> list:
+    """Returns a list of human-readable violations (empty == gate passes)."""
+    bad = []
+    for suite, rec in quick.items():
+        if "error" in rec:
+            bad.append(f"{suite}: suite errored: {rec['error']}")
+            continue
+        for key in HEADLINE_KEYS:
+            if key in rec and rec[key] < min_ratio:
+                bad.append(f"{suite}.{key} = {rec[key]:.3f} < {min_ratio}")
+    return bad
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--min-ratio", type=float, default=1.0,
+                    help="fail when any headline hdot/two_phase ratio is "
+                         "below this (default 1.0: hdot must not lose)")
+    ap.add_argument("--path", type=Path, default=REPO / "BENCH_quick.json")
+    args = ap.parse_args()
+    quick = json.loads(args.path.read_text())
+    for suite, rec in sorted(quick.items()):
+        heads = {k: round(rec[k], 3) for k in HEADLINE_KEYS if k in rec}
+        print(f"[ci_gate] {suite}: {heads or rec.get('error', 'no rows')}")
+    bad = check(quick, args.min_ratio)
+    if bad:
+        print("[ci_gate] FAIL — hdot schedule regressed vs two_phase:")
+        for b in bad:
+            print(f"[ci_gate]   {b}")
+        return 1
+    print(f"[ci_gate] OK — all headline ratios >= {args.min_ratio}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

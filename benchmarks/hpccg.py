@@ -2,7 +2,10 @@
 
 The paper taskifies ddot (subdomain reduction partials + MPI_Allreduce),
 waxpby and the nested sparsemv. Here: CG on the 27-point operator
-(core/stencil.hpccg_solve), z-stacked process domains, both schedules;
+(core/stencil.hpccg_solve) under three process topologies — z-stacked slabs,
+2-D (y, z) row blocks, and HPCCG's native 3-D (x, y, z) mesh (``--mesh
+PxRxC``), the corner couplings riding the sequential face-message chain —
+both schedules;
 convergence is schedule-invariant (asserted) and the collective structure
 (2 ddot allreduces + 1 halo exchange per iteration — CG's well-known pattern)
 is parsed from the compiled HLO.
@@ -15,6 +18,8 @@ from typing import Any, Dict
 
 def worker(devices: int, n: int, iters: int,
            mesh_shape: str = "") -> Dict[str, Any]:
+    import math
+
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -25,11 +30,15 @@ def worker(devices: int, n: int, iters: int,
     from repro.launch.mesh import make_grid_mesh, make_mesh
 
     if mesh_shape:
-        ry, rz = parse_mesh_shape(mesh_shape)
-        assert ry * rz == devices, (mesh_shape, devices)
-        mesh = make_grid_mesh(ry, rz)
-        axis = ("rows", "cols")      # 2-D row-block (y, z) decomposition
-        grid = [n, n * ry, n * rz]
+        parts = parse_mesh_shape(mesh_shape)
+        assert math.prod(parts) == devices, (mesh_shape, devices)
+        mesh = make_grid_mesh(*parts)
+        if len(parts) == 2:          # 2-D row-block (y, z) decomposition
+            axis = ("rows", "cols")
+            grid = [n, n * parts[0], n * parts[1]]
+        else:                        # HPCCG's native 3-D (x, y, z) mesh
+            axis = ("planes", "rows", "cols")
+            grid = [n * p for p in parts]
     else:
         mesh = make_mesh((devices,), ("data",))
         axis = "data"
@@ -61,16 +70,16 @@ def worker(devices: int, n: int, iters: int,
 
 def run(sizes=(1, 2, 4, 8), n: int = 48, iters: int = 25,
         mesh_shapes=()) -> Dict[str, Any]:
-    from benchmarks._util import parse_mesh_shape, run_worker
+    from benchmarks._util import mesh_devices, run_worker
 
     rows = [run_worker("benchmarks.hpccg", d,
                        ["--devices", str(d), "--n", str(n),
                         "--iters", str(iters)])
             for d in sizes]
     for ms in mesh_shapes:
-        ry, rz = parse_mesh_shape(ms)
-        rows.append(run_worker("benchmarks.hpccg", ry * rz,
-                               ["--devices", str(ry * rz), "--n", str(n),
+        d = mesh_devices(ms)
+        rows.append(run_worker("benchmarks.hpccg", d,
+                               ["--devices", str(d), "--n", str(n),
                                 "--iters", str(iters), "--mesh", ms]))
     return {"table": "paper §4.3 (HPCCG CG)", "rows": rows}
 
@@ -82,7 +91,8 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=48)
     ap.add_argument("--iters", type=int, default=25)
     ap.add_argument("--mesh", type=str, default="",
-                    help="RxC 2-D (y,z) process mesh; empty = z slabs")
+                    help="RxC 2-D (y,z) or PxRxC 3-D (x,y,z) process mesh; "
+                         "empty = z slabs")
     args = ap.parse_args()
     if args.worker:
         from benchmarks._util import emit

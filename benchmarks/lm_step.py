@@ -13,8 +13,6 @@ from typing import Any, Dict
 
 
 def worker(devices: int, steps: int) -> Dict[str, Any]:
-    import functools
-
     import jax
     import jax.numpy as jnp
     import numpy as np

@@ -12,11 +12,13 @@ Results land in results/bench/*.json + a markdown summary. Run:
 
 --quick additionally writes BENCH_quick.json at the repo root: one
 consolidated record (per suite: ops/s for both schedules + the
-hdot/two_phase ratio, with `mesh_shape` rows tracking the 2-D rows x cols
-decompositions) that is COMMITTED, so the overlap delta is a tracked
-trajectory across PRs instead of a one-off print. Add --update-docs to
-regenerate the benchmark table in docs/overlap.md from the same record
-(tests/test_docs.py fails if the committed pair drifts apart).
+hdot/two_phase ratio, with `mesh_shape` rows tracking the N-D grid-mesh
+decompositions — 2-D rows x cols and the 3-D planes x rows x cols HPCCG
+mesh — and per-row jax_version/device_count provenance) that is COMMITTED,
+so the overlap delta is a tracked trajectory across PRs instead of a
+one-off print. Add --update-docs to regenerate the benchmark table in
+docs/overlap.md from the same record (tests/test_docs.py fails if the
+committed pair drifts apart).
 """
 from __future__ import annotations
 
@@ -37,11 +39,13 @@ SUITES = {
         mesh_shapes=("4x1", "2x2") if quick else ("4x1", "2x2", "8x1", "4x2")),
     "table4_creams": lambda quick: table4_creams.run(
         sizes=(1, 2) if quick else (1, 2, 4, 8),
-        nz=256 if quick else 1024, steps=4 if quick else 10),
+        nz=256 if quick else 1024, steps=4 if quick else 10,
+        mesh_shapes=("2x2",) if quick else ("2x2", "4x2")),
     "hpccg": lambda quick: hpccg.run(
         sizes=(1, 2) if quick else (1, 2, 4, 8),
         n=24 if quick else 48, iters=10 if quick else 25,
-        mesh_shapes=("4x1", "2x2") if quick else ("4x1", "2x2", "8x1", "4x2")),
+        mesh_shapes=("4x1", "2x2", "2x2x2") if quick
+        else ("4x1", "2x2", "8x1", "4x2", "2x2x2", "4x2x1")),
     "bench_overlap": lambda quick: bench_overlap.run(
         sizes=(2,) if quick else (4, 8),
         s=1024 if quick else 4096, m=1024 if quick else 2048,
@@ -91,19 +95,28 @@ def _quick_record(records: dict) -> dict:
             row = {"devices": r.get("devices"), "metric": key,
                    "two_phase": tp, "hdot": hd,
                    "hdot_two_phase_ratio": hd / tp}
-            if "mesh_shape" in r:     # 2-D (rows x cols) decomposition row
+            # runner provenance (stamped by _util.emit in every worker):
+            # artifacts from different CI runners are only comparable when
+            # the toolchain + device count travel with the row
+            for k in ("jax_version", "device_count"):
+                if k in r:
+                    row[k] = r[k]
+            if "mesh_shape" in r:     # N-D grid-mesh decomposition row
                 row["mesh_shape"] = r["mesh_shape"]
             rows.append(row)
         entry: dict = {"rows": rows}
         # headline stays the largest 1-D row (comparable across PRs, PR 2
-        # onward); 2-D mesh rows get their own headline so the topology gap
-        # is tracked without redefining the original trajectory
+        # onward); 2-D / 3-D mesh rows get their own headline so each
+        # topology gap is tracked without redefining the original trajectory
         slab = [r for r in rows if "mesh_shape" not in r]
-        meshed = [r for r in rows if "mesh_shape" in r]
+        mesh2 = [r for r in rows if r.get("mesh_shape", "").count("x") == 1]
+        mesh3 = [r for r in rows if r.get("mesh_shape", "").count("x") == 2]
         if slab:
             entry["hdot_two_phase_ratio"] = slab[-1]["hdot_two_phase_ratio"]
-        if meshed:
-            entry["hdot_two_phase_ratio_2d"] = meshed[-1]["hdot_two_phase_ratio"]
+        if mesh2:
+            entry["hdot_two_phase_ratio_2d"] = mesh2[-1]["hdot_two_phase_ratio"]
+        if mesh3:
+            entry["hdot_two_phase_ratio_3d"] = mesh3[-1]["hdot_two_phase_ratio"]
         out[short] = entry
     return out
 

@@ -16,7 +16,6 @@ virtual devices in subprocess workers); we measure:
 from __future__ import annotations
 
 import argparse
-import sys
 from typing import Any, Dict
 
 

@@ -5,9 +5,12 @@ grows from +2.6% (1 node) to +13.3% (16 nodes) because the HDOT schedule
 hides the halo exchange behind the per-direction stencil tasks.
 
 Here: rk3_solve (8th-order, width-4 halos, Williamson RK3 — core/stencil) on
-1..8 virtual devices, z-decomposed, both schedules; wall clock + per-step
-collective wire bytes. The x/y stencils are the "other tasks" that hide the
-z-halo ppermute, exactly Figure 5's dependency graph.
+1..8 virtual devices, both schedules; wall clock + per-step collective wire
+bytes. The x/y stencils are the "other tasks" that hide the z-halo ppermute,
+exactly Figure 5's dependency graph. ``--mesh RxC`` switches to the 2-D
+(y, z) grid-mesh decomposition (stage-carried halos on BOTH axes; the y
+extent is scaled with the row count so every shard keeps the width-4
+pipelined path alive).
 """
 from __future__ import annotations
 
@@ -15,30 +18,43 @@ import argparse
 from typing import Any, Dict
 
 
-def worker(devices: int, nz: int, steps: int) -> Dict[str, Any]:
+def worker(devices: int, nz: int, steps: int,
+           mesh_shape: str = "") -> Dict[str, Any]:
     import jax
     import jax.numpy as jnp
     import numpy as np
 
-    from benchmarks._util import timeit
+    from benchmarks._util import parse_mesh_shape, timeit
     from repro.analysis.hlo import parse_collectives
     from repro.core.stencil import rk3_solve
-    from repro.launch.mesh import make_mesh
+    from repro.launch.mesh import make_grid_mesh, make_mesh
 
-    mesh = make_mesh((devices,), ("data",))
-    # paper: 20 x 20 x 7000; scaled-down x/y for CPU wall clock
+    if mesh_shape:
+        ry, rz = parse_mesh_shape(mesh_shape)  # RK3's grid mesh is (y, z)
+        assert ry * rz == devices, (mesh_shape, devices)
+        mesh = make_grid_mesh(ry, rz)
+        axis = ("rows", "cols")
+        # >= 32 y-cells per row shard keeps the width-4 pipelined path alive
+        shape = (20, 32 * ry, nz)
+    else:
+        mesh = make_mesh((devices,), ("data",))
+        axis = "data"
+        # paper: 20 x 20 x 7000; scaled-down x/y for CPU wall clock
+        shape = (20, 20, nz)
     key = jax.random.PRNGKey(0)
-    v0 = jax.random.normal(key, (20, 20, nz), jnp.float32)
+    v0 = jax.random.normal(key, shape, jnp.float32)
     out: Dict[str, Any] = {"devices": devices, "nz": nz, "steps": steps}
+    if mesh_shape:
+        out["mesh_shape"] = mesh_shape
     results = {}
     for mode in ("two_phase", "hdot"):
         def solve(v0=v0, mode=mode):
-            return rk3_solve(v0, mesh, "data", steps, mode=mode)
+            return rk3_solve(v0, mesh, axis, steps, mode=mode)
 
         sec = timeit(solve)
         results[mode] = np.asarray(solve())
         lowered = jax.jit(
-            lambda v: rk3_solve(v, mesh, "data", 1, mode=mode)).lower(v0)
+            lambda v: rk3_solve(v, mesh, axis, 1, mode=mode)).lower(v0)
         coll = parse_collectives(lowered.compile().as_text())
         out[mode] = {"seconds": sec, "steps_per_s": steps / sec,
                      "coll_ops_per_step": len(coll.ops),
@@ -50,13 +66,19 @@ def worker(devices: int, nz: int, steps: int) -> Dict[str, Any]:
     return out
 
 
-def run(sizes=(1, 2, 4, 8), nz: int = 1024, steps: int = 10) -> Dict[str, Any]:
-    from benchmarks._util import run_worker
+def run(sizes=(1, 2, 4, 8), nz: int = 1024, steps: int = 10,
+        mesh_shapes=()) -> Dict[str, Any]:
+    from benchmarks._util import mesh_devices, run_worker
 
     rows = [run_worker("benchmarks.table4_creams", d,
                        ["--devices", str(d), "--nz", str(nz),
                         "--steps", str(steps)])
             for d in sizes]
+    for ms in mesh_shapes:
+        d = mesh_devices(ms)
+        rows.append(run_worker("benchmarks.table4_creams", d,
+                               ["--devices", str(d), "--nz", str(nz),
+                                "--steps", str(steps), "--mesh", ms]))
     return {"table": "paper Table 4 (CREAMS RK3)", "rows": rows,
             "paper_gain_pct": {1: 2.58, 2: 3.13, 4: 5.94, 8: 9.97, 16: 13.33}}
 
@@ -67,15 +89,18 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--nz", type=int, default=1024)
     ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--mesh", type=str, default="",
+                    help="RxC 2-D (y,z) process mesh; empty = z slabs")
     args = ap.parse_args()
     if args.worker:
         from benchmarks._util import emit
 
-        emit(worker(args.devices, args.nz, args.steps))
+        emit(worker(args.devices, args.nz, args.steps, args.mesh))
         return
     rec = run()
     for r in rec["rows"]:
-        print(f"devices={r['devices']} two_phase={r['two_phase']['steps_per_s']:7.2f}/s "
+        print(f"devices={r['devices']} mesh={r.get('mesh_shape', '-'):>5s} "
+              f"two_phase={r['two_phase']['steps_per_s']:7.2f}/s "
               f"hdot={r['hdot']['steps_per_s']:7.2f}/s gain={r['gain_pct']:+6.2f}% "
               f"identical={r['numerics_identical']}")
 

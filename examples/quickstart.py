@@ -10,7 +10,6 @@
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.domain import Domain, decompose_grid

@@ -24,7 +24,7 @@ reported memory-bound truly is.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any
 
 import numpy as np
 

@@ -19,7 +19,6 @@ from __future__ import annotations
 import json
 import os
 import shutil
-import tempfile
 import threading
 from typing import Any, Dict, Optional, Tuple
 

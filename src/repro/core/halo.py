@@ -18,19 +18,30 @@ tasks, each reading ONLY its slice of the source (plus `width` ghost rows), so
 boundary strips are computed exactly once and the scheduler sees several
 independent interior tasks to hide the exchange behind.
 
-For multi-step solvers, :func:`halo_scan` is a double-buffered driver: the
+For multi-step solvers, :func:`halo_scan_nd` is a double-buffered driver: the
 halos for step k+1 ride a ppermute issued as soon as step k's boundary strips
 are done — i.e. the exchange for the NEXT step is in flight while the CURRENT
 step's interior chunks compute, removing the per-step comm/compute dependency
 chain entirely (one pipeline-fill exchange at the start is the only exposed
 latency; the drain step is peeled, so no dead final exchange is issued).
 
-The ``*_2d`` family generalizes the whole scheme to a (rows x cols) process
-mesh: :func:`exchange_halo_2d` moves both axes' face strips (corner-free —
-star stencils only), :func:`stencil_with_halo_2d` splits the block into four
-boundary-strip tasks plus a 2-D interior chunk grid cut by the SAME
-``decompose_grid`` scheme used at process level, and :func:`halo_scan_2d`
-double-buffers both axes' exchanges behind the interior compute.
+The machinery is N-DIMENSIONAL: ``decomp`` is a tuple of ``(axis_name, dim)``
+pairs — one per decomposed array dim — and the same scheme recurses over any
+number of mesh axes (paper §3: ONE partition function, applied at process
+level and again at task level, at every depth of the hierarchy):
+
+  * :func:`exchange_halo_nd` moves each axis's face slab (one ppermute pair
+    per axis, corner-free — star stencils only),
+  * :func:`stencil_with_halo_nd` splits the block into 2·N boundary-face
+    tasks plus an N-D interior chunk grid cut by the SAME ``decompose_grid``
+    scheme used at process level (via :func:`repro.core.domain.interior_boxes`),
+  * :func:`halo_scan_nd` double-buffers ALL axes' exchanges behind the
+    interior compute, stitching each axis's outgoing edges from the face
+    outputs alone so every ppermute departs before any interior chunk runs.
+
+The 1-D (``halo_scan``/``stencil_hdot``/...) and 2-D (``*_2d``) entry points
+are thin wrappers over the N-D implementation, kept for their ergonomic
+signatures (explicit ``lo/hi`` halos in 1-D; the flat four-halo tuple in 2-D).
 
 All functions run inside ``shard_map`` bodies; `axis_name` names the mesh axis
 that carries the process-level domain decomposition for `dim`.
@@ -45,6 +56,9 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.domain import interior_boxes
+
+# One decomposed dim: (mesh_axis_name, array_dim).
+Decomp = Sequence[Tuple[str, int]]
 
 
 def _edge(u: jax.Array, dim: int, side: str, width: int) -> jax.Array:
@@ -99,97 +113,337 @@ def pad_with_halo(u: jax.Array, axis_name: str, width: int, dim: int,
 
 
 # --------------------------------------------------------------------------
-# Stencil application schedules.
+# N-D core — corner-free multi-axis pipelining.
 #
 # `stencil_fn(padded)` consumes a block padded by `width` ghost cells on BOTH
-# ends of `dim` and must return the updated un-padded block (shape of the
-# interior of `padded` along `dim`). "Star"-shaped stencils only: corners
-# between two decomposed dims are not exchanged (sufficient for the paper's
-# Heat2D 5-point and CREAMS per-direction WENO stencils).
+# ends of EVERY dim in `dims` and must return the updated un-padded block.
+# "Star"-shaped stencils only: corners between two decomposed dims are never
+# exchanged (sufficient for the paper's Heat2D 5-point and CREAMS
+# per-direction WENO stencils; HPCCG's 27-point corner couplings ride the
+# sequential face-message chain in core/stencil.py instead).
+#
+# Partition of a block with extents (n_0 .. n_{N-1}) along the decomposed
+# dims ("onion" faces — the 2-D strips generalized):
+#   face (k, lo/hi) owns  dims j<k: the interior range [w, n_j - w)
+#                         dim  k  : [0, w)  /  [n_k - w, n_k)
+#                         dims j>k: the full extent [0, n_j)
+#   interior: [w, n_j - w) on every decomposed dim, cut into a grid of chunk
+#   tasks by `interior_boxes` — the process-level partition scheme reused at
+#   task level, per the paper.
+# Face (k, ·) consumes ONLY axis k's halo plus restricted slices of the
+# later axes' halos (zero in the corner ghosts, which star stencils never
+# read), so each halo ppermute pair has exactly two consumer tasks.
+# --------------------------------------------------------------------------
+
+def _sl(u: jax.Array, dim: int, a: int, b: int) -> jax.Array:
+    return lax.slice_in_dim(u, a, b, axis=dim)
+
+
+def _norm_subn(subdomains, n: int) -> Tuple[int, ...]:
+    """Grainsize knob: an int means the same chunk count on every dim."""
+    if isinstance(subdomains, int):
+        return (subdomains,) * n
+    t = tuple(subdomains)
+    assert len(t) == n, (subdomains, n)
+    return t
+
+
+def _norm_sub2(subdomains) -> Tuple[int, int]:
+    return _norm_subn(subdomains, 2)
+
+
+def exchange_halo_nd(u: jax.Array, decomp: Decomp, width: int,
+                     periodic: bool = False
+                     ) -> List[Tuple[jax.Array, jax.Array]]:
+    """One ppermute pair per decomposed axis; returns [(lo_k, hi_k), ...] in
+    `decomp` order. Corner ghosts are NOT exchanged."""
+    return [exchange_halo(u, a, width, d, periodic) for a, d in decomp]
+
+
+def pad_with_halo_nd(u: jax.Array, halos, width: int,
+                     dims: Sequence[int]) -> jax.Array:
+    """Assemble the corner-free padded block: face halos on every decomposed
+    dim, ZEROS in the corner ghosts (star stencils never read them)."""
+    out = u
+    for k in reversed(range(len(dims))):
+        lo, hi = halos[k]
+        pads = [(0, 0)] * u.ndim
+        for j in range(k + 1, len(dims)):
+            pads[dims[j]] = (width, width)
+        lo = jnp.pad(lo, pads)
+        hi = jnp.pad(hi, pads)
+        out = jnp.concatenate([lo, out, hi], axis=dims[k])
+    return out
+
+
+def _face_src_nd(u: jax.Array, halos, k: int, side: str, width: int,
+                 dims: Sequence[int]) -> jax.Array:
+    """Ghost-extended source for face (k, side) — the ONLY consumer of axis
+    k's `side` halo. Along earlier dims the face outputs the interior range,
+    so u's own cells are the ghosts (full extent, no halo needed); along
+    later dims the face spans the full extent, so their halos are stitched
+    in, restricted to this face's cells and zero-padded into the corners."""
+    w = width
+    dk = dims[k]
+    nk = u.shape[dk]
+    lo_k, hi_k = halos[k]
+    if side == "lo":
+        cells = (0, 2 * w)          # the u-cells adjacent to this face
+        src = jnp.concatenate([lo_k, _sl(u, dk, *cells)], axis=dk)
+        zk = (w, 0)                 # where axis k's halo sits inside src
+    else:
+        cells = (nk - 2 * w, nk)
+        src = jnp.concatenate([_sl(u, dk, *cells), hi_k], axis=dk)
+        zk = (0, w)
+    for j in range(k + 1, len(dims)):
+        lo_j, hi_j = halos[j]
+
+        def clip(h):
+            h = _sl(h, dk, *cells)
+            pads = [(0, 0)] * u.ndim
+            pads[dk] = zk                       # corner with axis k: zeros
+            for jp in range(k + 1, j):
+                pads[dims[jp]] = (width, width)  # corner with axis jp: zeros
+            return jnp.pad(h, pads)
+
+        src = jnp.concatenate([clip(lo_j), src, clip(hi_j)], axis=dims[j])
+    return src
+
+
+def _faces_nd(u: jax.Array, halos,
+              stencil_fn: Callable[[jax.Array], jax.Array], width: int,
+              dims: Sequence[int]) -> List[Tuple[jax.Array, jax.Array]]:
+    """The 2·N boundary-face tasks — the only consumers of the halos."""
+    return [(stencil_fn(_face_src_nd(u, halos, k, "lo", width, dims)),
+             stencil_fn(_face_src_nd(u, halos, k, "hi", width, dims)))
+            for k in range(len(dims))]
+
+
+def _interior_chunks_nd(u: jax.Array,
+                        stencil_fn: Callable[[jax.Array], jax.Array],
+                        width: int, dims: Sequence[int],
+                        subdomains: Tuple[int, ...]) -> jax.Array:
+    """Interior cells [w, n-w) per decomposed dim as an N-D grid of
+    independent chunk tasks, cut by `interior_boxes` — the process-level
+    partition scheme reused at task level. A chunk reads only its subdomain
+    plus `width` ghosts, so chunks are disjoint work the latency-hiding
+    scheduler interleaves with every axis's ppermutes."""
+    w = width
+    ext = [u.shape[d] for d in dims]
+    ks = [max(1, min(k, (n - 2 * w) // max(1, 2 * w)))  # keep chunks >= 2w
+          for k, n in zip(subdomains, ext)]
+    boxes = interior_boxes(ext, w, ks)  # row-major over the ks grid
+    outs = []
+    for b in boxes:
+        src = u
+        for lvl, d in enumerate(dims):
+            src = _sl(src, d, b.start[lvl] - w, b.stop[lvl] + w)
+        outs.append(stencil_fn(src))
+    for lvl in range(len(ks) - 1, -1, -1):  # row-major -> nested concat
+        k = ks[lvl]
+        outs = [outs[i] if k == 1
+                else jnp.concatenate(outs[i:i + k], axis=dims[lvl])
+                for i in range(0, len(outs), k)]
+    return outs[0]
+
+
+def _assemble_nd(faces, interior: jax.Array,
+                 dims: Sequence[int]) -> jax.Array:
+    """Wrap the interior chunk grid in the face outputs, innermost dim out."""
+    out = interior
+    for k in reversed(range(len(dims))):
+        lo, hi = faces[k]
+        out = jnp.concatenate([lo, out, hi], axis=dims[k])
+    return out
+
+
+def stencil_with_halo_nd(u: jax.Array, halos,
+                         stencil_fn: Callable[[jax.Array], jax.Array],
+                         width: int, dims: Sequence[int],
+                         subdomains=2) -> jax.Array:
+    """Communication-free half of the N-D hdot schedule: apply `stencil_fn`
+    to a block whose 2·N face halos were ALREADY received (e.g. pipelined by
+    halo_scan_nd or a solver carrying halos across iterations)."""
+    dims = tuple(dims)
+    subdomains = _norm_subn(subdomains, len(dims))
+    if any(u.shape[d] < 4 * width for d in dims):  # degenerate: no interior
+        return stencil_fn(pad_with_halo_nd(u, halos, width, dims))
+    faces = _faces_nd(u, halos, stencil_fn, width, dims)
+    interior = _interior_chunks_nd(u, stencil_fn, width, dims, subdomains)
+    return _assemble_nd(faces, interior, dims)
+
+
+def stencil_two_phase_nd(u: jax.Array,
+                         stencil_fn: Callable[[jax.Array], jax.Array],
+                         decomp: Decomp, width: int,
+                         periodic: bool = False) -> jax.Array:
+    """comm(all axes); barrier; compute(whole block) — paper Code 2."""
+    dims = tuple(d for _, d in decomp)
+    halos = exchange_halo_nd(u, decomp, width, periodic)
+    return stencil_fn(pad_with_halo_nd(u, halos, width, dims))
+
+
+def stencil_hdot_nd(u: jax.Array,
+                    stencil_fn: Callable[[jax.Array], jax.Array],
+                    decomp: Decomp, width: int, periodic: bool = False,
+                    subdomains=2) -> jax.Array:
+    """N-D interior/boundary over-decomposition (paper Code 4): 2·N face
+    tasks consume the N ppermute pairs; the interior chunk grid depends only
+    on `u`. Numerics identical to the two-phase schedule (asserted in tests).
+    """
+    dims = tuple(d for _, d in decomp)
+    if any(u.shape[d] < 4 * width for d in dims):
+        return stencil_two_phase_nd(u, stencil_fn, decomp, width, periodic)
+    halos = exchange_halo_nd(u, decomp, width, periodic)
+    return stencil_with_halo_nd(u, halos, stencil_fn, width, dims, subdomains)
+
+
+def stencil_apply_nd(u: jax.Array,
+                     stencil_fn: Callable[[jax.Array], jax.Array],
+                     decomp: Decomp, width: int, periodic: bool = False,
+                     mode: str = "hdot", subdomains=2) -> jax.Array:
+    if mode == "hdot":
+        return stencil_hdot_nd(u, stencil_fn, decomp, width, periodic,
+                               subdomains)
+    if mode in ("none", "two_phase"):
+        return stencil_two_phase_nd(u, stencil_fn, decomp, width, periodic)
+    raise ValueError(f"unknown overlap mode {mode!r}")
+
+
+def halo_scan_nd(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
+                 decomp: Decomp, width: int, steps: int,
+                 periodic: bool = False, mode: str = "hdot", subdomains=2,
+                 step_out_fn: Optional[Callable[[jax.Array, jax.Array],
+                                                jax.Array]] = None,
+                 unroll: int = 1, peel: bool = True
+                 ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Double-buffered multi-step stencil driver on an N-D process mesh.
+
+    In hdot mode the scan carry is (block, per-axis halos): the halos for
+    step k arrive with the carry, so the body can (1) finish step k's 2·N
+    boundary faces — the only halo consumers; (2) IMMEDIATELY launch EVERY
+    axis's ppermute pair for step k+1 (the new block's axis-k edges are
+    stitched from the face outputs alone, corner-free); (3) only then chew
+    through step k's interior chunk grid. All N exchanges are therefore
+    always in flight behind the interior compute; the only exposed latency
+    is the pipeline-fill exchange before the scan.
+
+    The final step is PEELED out of the scan (pipeline drain): the in-body
+    exchange would feed a step that never runs, so the scan covers steps-1
+    trips and the last step consumes its carried halos without launching new
+    ppermutes — N dead exchange pairs per solve saved (``peel=False`` keeps
+    the old drain-in-scan lowering; regression tests count the ppermutes).
+
+    `step_out_fn(u_new, u_old)` optionally produces a per-step output (e.g. a
+    residual); its stacked results are returned as the second element (None
+    when not provided). Numerics are identical to `steps` iterated calls of
+    :func:`stencil_apply_nd` — asserted in tests. `unroll` is forwarded to
+    lax.scan (the HLO-inspection tests unroll fully so every exchange is a
+    countable op definition).
+    """
+    decomp = tuple((a, d) for a, d in decomp)
+    dims = tuple(d for _, d in decomp)
+    w = width
+    ext = tuple(u.shape[d] for d in dims)
+    if mode != "hdot" or any(n < 4 * w for n in ext) or steps < 1:
+        # two-phase baseline (or degenerate block / empty scan, which keeps
+        # the length-0 stacked-outs contract): plain comm->compute scan
+        def body(u, _):
+            u_new = stencil_apply_nd(u, stencil_fn, decomp, w, periodic,
+                                     mode, subdomains)
+            return u_new, step_out_fn(u_new, u) if step_out_fn else None
+        return lax.scan(body, u, None, length=steps, unroll=unroll)
+
+    subdomains = _norm_subn(subdomains, len(dims))
+
+    def exchange_from_faces(faces):
+        # The new block's axis-k edges, stitched from face outputs alone —
+        # still no interior dependency, so every pair departs before any
+        # interior chunk is touched. Axis k's edge spans the full extent of
+        # every other dim: the earlier axes' faces contribute their first /
+        # last `w` cells along dim k (faces of LATER axes never reach the
+        # edge region — their dim-k extent is the interior range).
+        halos_next = []
+        for k, (a, dk) in enumerate(decomp):
+            lo_e, hi_e = faces[k]
+            nk = ext[k]
+            for j in reversed(range(k)):
+                lo_j, hi_j = faces[j]
+                lo_e = jnp.concatenate(
+                    [_sl(lo_j, dk, 0, w), lo_e, _sl(hi_j, dk, 0, w)],
+                    axis=dims[j])
+                hi_e = jnp.concatenate(
+                    [_sl(lo_j, dk, nk - w, nk), hi_e,
+                     _sl(hi_j, dk, nk - w, nk)], axis=dims[j])
+            halos_next.append(exchange_edges(lo_e, hi_e, a, periodic))
+        return halos_next
+
+    def body(carry, _):
+        u, halos = carry
+        faces = _faces_nd(u, halos, stencil_fn, w, dims)
+        halos_next = exchange_from_faces(faces)
+        interior = _interior_chunks_nd(u, stencil_fn, w, dims, subdomains)
+        u_new = _assemble_nd(faces, interior, dims)
+        out = step_out_fn(u_new, u) if step_out_fn else None
+        return (u_new, halos_next), out
+
+    halos0 = exchange_halo_nd(u, decomp, w, periodic)  # pipeline fill
+    if not peel:
+        (u, _), outs = lax.scan(body, (u, halos0), None, length=steps,
+                                unroll=unroll)
+        return u, outs
+    (u, halos), outs = lax.scan(body, (u, halos0), None, length=steps - 1,
+                                unroll=unroll)
+    # Peeled drain: the last step consumes its halos, launches nothing.
+    u_new = stencil_with_halo_nd(u, halos, stencil_fn, w, dims, subdomains)
+    if step_out_fn is not None:
+        outs = jax.tree.map(
+            lambda s, o: jnp.concatenate([s, o[None]], axis=0), outs,
+            step_out_fn(u_new, u))
+    return u_new, outs
+
+
+# --------------------------------------------------------------------------
+# 1-D entry points — thin wrappers over the N-D core, kept for the explicit
+# (lo_halo, hi_halo) signatures the pipelined solvers in core/stencil.py use.
+# `stencil_fn(padded)` consumes a block padded by `width` on both ends of
+# `dim` only.
 # --------------------------------------------------------------------------
 
 def stencil_two_phase(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
                       axis_name: str, width: int, dim: int,
                       periodic: bool = False) -> jax.Array:
     """comm(D); barrier; compute(D) — paper Code 2."""
-    padded = pad_with_halo(u, axis_name, width, dim, periodic)
-    return stencil_fn(padded)
-
-
-def _interior_chunks(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
-                     width: int, dim: int, subdomains: int) -> List[jax.Array]:
-    """Interior cells [width, n-width) as up to `subdomains` independent chunk
-    tasks (the paper's grainsize knob, Code 4's `for s in subdomains`).
-
-    The chunk covering cells [a, b) reads ONLY u[a-width : b+width] — each
-    task's footprint is its subdomain plus `width` ghost cells, so boundary
-    strips are never recomputed and the chunks are disjoint work the
-    latency-hiding scheduler interleaves with the halo ppermutes."""
-    n = u.shape[dim]
-    m = n - 2 * width                     # interior cell count
-    k = max(1, min(subdomains, m // max(1, 2 * width)))  # keep chunks >= 2*width
-    if k == 1:
-        return [stencil_fn(u)]           # one interior task, full ghost context
-    bounds = [width + (m * t) // k for t in range(k + 1)]
-    return [stencil_fn(lax.slice_in_dim(u, a - width, b + width, axis=dim))
-            for a, b in zip(bounds[:-1], bounds[1:])]
-
-
-def _boundary_srcs(u: jax.Array, lo_halo: jax.Array, hi_halo: jax.Array,
-                   width: int, dim: int) -> Tuple[jax.Array, jax.Array]:
-    n = u.shape[dim]
-    lo_src = jnp.concatenate(
-        [lo_halo, lax.slice_in_dim(u, 0, 2 * width, axis=dim)], axis=dim)
-    hi_src = jnp.concatenate(
-        [lax.slice_in_dim(u, n - 2 * width, n, axis=dim), hi_halo], axis=dim)
-    return lo_src, hi_src
+    return stencil_two_phase_nd(u, stencil_fn, ((axis_name, dim),), width,
+                                periodic)
 
 
 def stencil_with_halo(u: jax.Array, lo_halo: jax.Array, hi_halo: jax.Array,
                       stencil_fn: Callable[[jax.Array], jax.Array],
                       width: int, dim: int, subdomains: int = 4) -> jax.Array:
-    """Communication-free half of the hdot schedule: apply `stencil_fn` to a
-    block whose halos were ALREADY received (e.g. pipelined by halo_scan or a
-    solver carrying halos across iterations). Boundary strips consume the
-    halos; the interior is over-decomposed into `subdomains` chunk tasks."""
-    n = u.shape[dim]
-    if n < 4 * width:  # degenerate block: no interior to split off
-        return stencil_fn(jnp.concatenate([lo_halo, u, hi_halo], axis=dim))
-    lo_src, hi_src = _boundary_srcs(u, lo_halo, hi_halo, width, dim)
-    lo_out = stencil_fn(lo_src)                  # updates cells [0, width)
-    hi_out = stencil_fn(hi_src)                  # updates cells [n-width, n)
-    interior = _interior_chunks(u, stencil_fn, width, dim, subdomains)
-    return jnp.concatenate([lo_out, *interior, hi_out], axis=dim)
+    """Communication-free half of the 1-D hdot schedule: apply `stencil_fn`
+    to a block whose halos were ALREADY received (e.g. pipelined by halo_scan
+    or a solver carrying halos across iterations). Boundary strips consume
+    the halos; the interior is over-decomposed into `subdomains` chunks."""
+    return stencil_with_halo_nd(u, [(lo_halo, hi_halo)], stencil_fn, width,
+                                (dim,), (subdomains,))
 
 
 def stencil_hdot(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
                  axis_name: str, width: int, dim: int,
                  periodic: bool = False,
                  subdomains: int = 4) -> jax.Array:
-    """Interior/boundary over-decomposition (paper Code 4).
-
-    The interior — split into `subdomains` chunk tasks, each reading only its
-    own slice plus ghosts — depends only on `u`; the two boundary strips are
-    the sole consumers of the halo ppermutes. Chunks are concatenated back, so
-    numerics are identical to the two-phase schedule (asserted in tests).
-    """
-    n = u.shape[dim]
-    if n < 4 * width:  # degenerate block: no interior to overlap with
-        return stencil_two_phase(u, stencil_fn, axis_name, width, dim, periodic)
-    lo_halo, hi_halo = exchange_halo(u, axis_name, width, dim, periodic)
-    return stencil_with_halo(u, lo_halo, hi_halo, stencil_fn, width, dim,
-                             subdomains)
+    """Interior/boundary over-decomposition (paper Code 4), one mesh axis."""
+    return stencil_hdot_nd(u, stencil_fn, ((axis_name, dim),), width,
+                           periodic, (subdomains,))
 
 
 def stencil_apply(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
                   axis_name: str, width: int, dim: int,
                   periodic: bool = False, mode: str = "hdot",
                   subdomains: int = 4) -> jax.Array:
-    if mode == "hdot":
-        return stencil_hdot(u, stencil_fn, axis_name, width, dim, periodic, subdomains)
-    if mode in ("none", "two_phase"):
-        return stencil_two_phase(u, stencil_fn, axis_name, width, dim, periodic)
-    raise ValueError(f"unknown overlap mode {mode!r}")
+    return stencil_apply_nd(u, stencil_fn, ((axis_name, dim),), width,
+                            periodic, mode, (subdomains,))
 
 
 def halo_scan(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
@@ -199,88 +453,22 @@ def halo_scan(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
               step_out_fn: Optional[Callable[[jax.Array, jax.Array], jax.Array]]
               = None, unroll: int = 1,
               peel: bool = True) -> Tuple[jax.Array, Optional[jax.Array]]:
-    """Double-buffered multi-step stencil driver (lax.scan over `steps`).
-
-    In hdot mode the scan carry is (block, lo_halo, hi_halo): the halos for
-    step k arrive with the carry, so the body can (1) finish step k's boundary
-    strips, (2) IMMEDIATELY launch the ppermute that feeds step k+1 — the new
-    block's edges are exactly those boundary outputs — and (3) only then chew
-    through step k's interior chunk tasks. The exchange for the next step is
-    therefore always in flight behind the current step's interior compute; the
-    only exposed latency is the single pipeline-fill exchange before the scan.
-
-    The final step is PEELED out of the scan (pipeline drain): the in-body
-    exchange would feed a step that never runs, so the scan covers steps-1
-    trips and the last step consumes its carried halos without launching a new
-    ppermute pair — one dead exchange per solve saved (``peel=False`` keeps
-    the old drain-in-scan lowering; the regression test counts the ppermutes).
-
-    `step_out_fn(u_new, u_old)` optionally produces a per-step output (e.g. a
-    residual); its stacked results are returned as the second element (None
-    when not provided). Numerics are identical to `steps` iterated calls of
-    :func:`stencil_apply` — asserted in tests. `unroll` is forwarded to
-    lax.scan (the HLO-inspection tests unroll fully so every exchange is a
-    countable op definition).
-    """
-    n = u.shape[dim]
-    if mode != "hdot" or n < 4 * width or steps < 1:
-        # two-phase baseline (or degenerate block / empty scan, which keeps
-        # the length-0 stacked-outs contract): plain comm->compute scan
-        def body(u, _):
-            u_new = stencil_apply(u, stencil_fn, axis_name, width, dim,
-                                  periodic, mode, subdomains)
-            return u_new, step_out_fn(u_new, u) if step_out_fn else None
-        return lax.scan(body, u, None, length=steps, unroll=unroll)
-
-    def strips(u, lo_halo, hi_halo):
-        lo_src, hi_src = _boundary_srcs(u, lo_halo, hi_halo, width, dim)
-        return stencil_fn(lo_src), stencil_fn(hi_src)
-
-    def body(carry, _):
-        u, lo_halo, hi_halo = carry
-        lo_out, hi_out = strips(u, lo_halo, hi_halo)   # new edge cells
-        # The updated block's edge strips ARE lo_out/hi_out — hand them to the
-        # ring now so the next step's halos travel while the interior computes.
-        lo_next, hi_next = exchange_edges(lo_out, hi_out, axis_name, periodic)
-        interior = _interior_chunks(u, stencil_fn, width, dim, subdomains)
-        u_new = jnp.concatenate([lo_out, *interior, hi_out], axis=dim)
-        out = step_out_fn(u_new, u) if step_out_fn else None
-        return (u_new, lo_next, hi_next), out
-
-    lo0, hi0 = exchange_halo(u, axis_name, width, dim, periodic)  # pipeline fill
-    if not peel:
-        (u, _, _), outs = lax.scan(body, (u, lo0, hi0), None, length=steps,
-                                   unroll=unroll)
-        return u, outs
-    (u, lo_h, hi_h), outs = lax.scan(body, (u, lo0, hi0), None,
-                                     length=steps - 1, unroll=unroll)
-    # Peeled drain: the last step consumes its halos, launches nothing.
-    u_new = stencil_with_halo(u, lo_h, hi_h, stencil_fn, width, dim,
-                              subdomains)
-    if step_out_fn is not None:
-        outs = jax.tree.map(
-            lambda s, o: jnp.concatenate([s, o[None]], axis=0), outs,
-            step_out_fn(u_new, u))
-    return u_new, outs
+    """Double-buffered multi-step driver on one mesh axis (see
+    :func:`halo_scan_nd` for the schedule)."""
+    return halo_scan_nd(u, stencil_fn, ((axis_name, dim),), width, steps,
+                        periodic, mode, (subdomains,), step_out_fn, unroll,
+                        peel)
 
 
 # --------------------------------------------------------------------------
-# 2-D (rows x cols) process decomposition — corner-free two-dim pipelining.
-#
-# The same interior/boundary over-decomposition, applied on BOTH mesh axes at
-# once: a block owns four edge strips (d0-lo/hi spanning the full d1 extent,
-# d1-lo/hi covering the remaining interior rows) and a 2-D grid of interior
-# chunk tasks cut by the SAME `decompose_grid` scheme the process level uses
-# (paper §3.2: one partition function, two levels). Corner ghosts are never
-# exchanged: `stencil_fn` must be star-shaped (5-point Jacobi, per-direction
-# WENO, ...), so the corner cells of the padded source are dead values.
-#
-# `stencil_fn(padded)` here consumes a block padded by `width` ghost cells on
-# both ends of BOTH dims in `dims` and returns the un-padded update.
+# 2-D (rows x cols) entry points — thin wrappers over the N-D core, kept for
+# the flat four-halo tuple signature. `stencil_fn(padded)` consumes a block
+# padded by `width` on both ends of BOTH dims in `dims`.
 # --------------------------------------------------------------------------
 
-def _sl(u: jax.Array, dim: int, a: int, b: int) -> jax.Array:
-    return lax.slice_in_dim(u, a, b, axis=dim)
+def _halos2(halos):
+    lo0, hi0, lo1, hi1 = halos
+    return ((lo0, hi0), (lo1, hi1))
 
 
 def exchange_halo_2d(u: jax.Array, axis_names: Tuple[str, str], width: int,
@@ -288,8 +476,8 @@ def exchange_halo_2d(u: jax.Array, axis_names: Tuple[str, str], width: int,
                      ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Combined edge exchange on both mesh axes (one ppermute pair per axis).
     Returns (lo0, hi0, lo1, hi1); corner ghosts are NOT exchanged."""
-    lo0, hi0 = exchange_halo(u, axis_names[0], width, dims[0], periodic)
-    lo1, hi1 = exchange_halo(u, axis_names[1], width, dims[1], periodic)
+    (lo0, hi0), (lo1, hi1) = exchange_halo_nd(
+        u, tuple(zip(axis_names, dims)), width, periodic)
     return lo0, hi0, lo1, hi1
 
 
@@ -297,16 +485,7 @@ def pad_with_halo_2d(u: jax.Array, halos, width: int, dims: Tuple[int, int]
                      ) -> jax.Array:
     """Assemble the corner-free padded block: halos on the four faces, ZEROS
     in the (2*width)^2 corners (star stencils never read them)."""
-    d0, d1 = dims
-    lo0, hi0, lo1, hi1 = halos
-    shp = list(u.shape)
-    shp[d0] = width
-    shp[d1] = width
-    zc = jnp.zeros(shp, u.dtype)
-    mid = jnp.concatenate([lo1, u, hi1], axis=d1)
-    top = jnp.concatenate([zc, lo0, zc], axis=d1)
-    bot = jnp.concatenate([zc, hi0, zc], axis=d1)
-    return jnp.concatenate([top, mid, bot], axis=d0)
+    return pad_with_halo_nd(u, _halos2(halos), width, dims)
 
 
 def stencil_two_phase_2d(u: jax.Array,
@@ -315,82 +494,8 @@ def stencil_two_phase_2d(u: jax.Array,
                          dims: Tuple[int, int], periodic: bool = False
                          ) -> jax.Array:
     """comm(both axes); barrier; compute(whole block) — the 2-D baseline."""
-    halos = exchange_halo_2d(u, axis_names, width, dims, periodic)
-    return stencil_fn(pad_with_halo_2d(u, halos, width, dims))
-
-
-def _norm_sub2(subdomains) -> Tuple[int, int]:
-    if isinstance(subdomains, int):
-        return (subdomains, subdomains)
-    kr, kc = subdomains
-    return (kr, kc)
-
-
-def _strips_2d(u: jax.Array, lo0, hi0, lo1, hi1,
-               stencil_fn: Callable[[jax.Array], jax.Array], width: int,
-               dims: Tuple[int, int]) -> Tuple[jax.Array, ...]:
-    """The four boundary-strip tasks — the ONLY consumers of the halos.
-
-    Partition of the block: d0 strips own rows [0,w) and [n-w,n) at full d1
-    extent; d1 strips own the remaining rows x cols [0,w) / [m-w,m); the
-    interior owns the rest. The d1-strip sources span all of u's rows, so
-    they consume only the d1 halo — each strip depends on exactly one
-    ppermute pair (plus zero corner ghosts, dead for star stencils)."""
-    d0, d1 = dims
-    w = width
-    n, m = u.shape[d0], u.shape[d1]
-    shp = list(u.shape)
-    shp[d0] = w
-    shp[d1] = w
-    zc = jnp.zeros(shp, u.dtype)
-    rows = jnp.concatenate([lo0, _sl(u, d0, 0, 2 * w)], axis=d0)
-    lpad = jnp.concatenate([zc, _sl(lo1, d0, 0, 2 * w)], axis=d0)
-    rpad = jnp.concatenate([zc, _sl(hi1, d0, 0, 2 * w)], axis=d0)
-    lo0_out = stencil_fn(jnp.concatenate([lpad, rows, rpad], axis=d1))
-    rows = jnp.concatenate([_sl(u, d0, n - 2 * w, n), hi0], axis=d0)
-    lpad = jnp.concatenate([_sl(lo1, d0, n - 2 * w, n), zc], axis=d0)
-    rpad = jnp.concatenate([_sl(hi1, d0, n - 2 * w, n), zc], axis=d0)
-    hi0_out = stencil_fn(jnp.concatenate([lpad, rows, rpad], axis=d1))
-    lo1_out = stencil_fn(jnp.concatenate([lo1, _sl(u, d1, 0, 2 * w)], axis=d1))
-    hi1_out = stencil_fn(jnp.concatenate([_sl(u, d1, m - 2 * w, m), hi1], axis=d1))
-    return lo0_out, hi0_out, lo1_out, hi1_out
-
-
-def _interior_chunks_2d(u: jax.Array,
-                        stencil_fn: Callable[[jax.Array], jax.Array],
-                        width: int, dims: Tuple[int, int],
-                        subdomains: Tuple[int, int]) -> jax.Array:
-    """Interior cells [w, n-w) x [w, m-w) as a (kr x kc) grid of independent
-    chunk tasks, cut by `decompose_grid` — the process-level partition scheme
-    reused at task level. Chunk [a,b)x[c,d) reads only u[a:b+2w, c:d+2w]
-    (its subdomain plus ghosts), so chunks are disjoint work the scheduler
-    interleaves with both axes' ppermutes."""
-    d0, d1 = dims
-    w = width
-    n, m = u.shape[d0], u.shape[d1]
-    ni, mi = n - 2 * w, m - 2 * w
-    kr, kc = _norm_sub2(subdomains)
-    kr = max(1, min(kr, ni // max(1, 2 * w)))   # keep chunks >= 2*width
-    kc = max(1, min(kc, mi // max(1, 2 * w)))
-    boxes = interior_boxes((n, m), w, (kr, kc))  # row-major, block coords
-    rows = []
-    for r in range(kr):
-        row = []
-        for c in range(kc):
-            b = boxes[r * kc + c]
-            src = _sl(_sl(u, d0, b.start[0] - w, b.stop[0] + w),
-                      d1, b.start[1] - w, b.stop[1] + w)
-            row.append(stencil_fn(src))
-        rows.append(row[0] if kc == 1 else jnp.concatenate(row, axis=d1))
-    return rows[0] if kr == 1 else jnp.concatenate(rows, axis=d0)
-
-
-def _assemble_2d(strips, interior: jax.Array, dims: Tuple[int, int]
-                 ) -> jax.Array:
-    lo0_out, hi0_out, lo1_out, hi1_out = strips
-    d0, d1 = dims
-    mid = jnp.concatenate([lo1_out, interior, hi1_out], axis=d1)
-    return jnp.concatenate([lo0_out, mid, hi0_out], axis=d0)
+    return stencil_two_phase_nd(u, stencil_fn, tuple(zip(axis_names, dims)),
+                                width, periodic)
 
 
 def stencil_with_halo_2d(u: jax.Array, halos,
@@ -399,12 +504,8 @@ def stencil_with_halo_2d(u: jax.Array, halos,
                          subdomains=(2, 2)) -> jax.Array:
     """Communication-free half of the 2-D hdot schedule: apply `stencil_fn`
     to a block whose four face halos were ALREADY received."""
-    d0, d1 = dims
-    if u.shape[d0] < 4 * width or u.shape[d1] < 4 * width:
-        return stencil_fn(pad_with_halo_2d(u, halos, width, dims))
-    strips = _strips_2d(u, *halos, stencil_fn, width, dims)
-    interior = _interior_chunks_2d(u, stencil_fn, width, dims, subdomains)
-    return _assemble_2d(strips, interior, dims)
+    return stencil_with_halo_nd(u, _halos2(halos), stencil_fn, width, dims,
+                                _norm_sub2(subdomains))
 
 
 def stencil_hdot_2d(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
@@ -413,12 +514,8 @@ def stencil_hdot_2d(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
                     subdomains=(2, 2)) -> jax.Array:
     """2-D interior/boundary over-decomposition: four strip tasks consume the
     two ppermute pairs; the (kr x kc) interior chunk grid depends only on u."""
-    d0, d1 = dims
-    if u.shape[d0] < 4 * width or u.shape[d1] < 4 * width:
-        return stencil_two_phase_2d(u, stencil_fn, axis_names, width, dims,
-                                    periodic)
-    halos = exchange_halo_2d(u, axis_names, width, dims, periodic)
-    return stencil_with_halo_2d(u, halos, stencil_fn, width, dims, subdomains)
+    return stencil_hdot_nd(u, stencil_fn, tuple(zip(axis_names, dims)), width,
+                           periodic, _norm_sub2(subdomains))
 
 
 def stencil_apply_2d(u: jax.Array,
@@ -426,13 +523,8 @@ def stencil_apply_2d(u: jax.Array,
                      axis_names: Tuple[str, str], width: int,
                      dims: Tuple[int, int], periodic: bool = False,
                      mode: str = "hdot", subdomains=(2, 2)) -> jax.Array:
-    if mode == "hdot":
-        return stencil_hdot_2d(u, stencil_fn, axis_names, width, dims,
-                               periodic, subdomains)
-    if mode in ("none", "two_phase"):
-        return stencil_two_phase_2d(u, stencil_fn, axis_names, width, dims,
-                                    periodic)
-    raise ValueError(f"unknown overlap mode {mode!r}")
+    return stencil_apply_nd(u, stencil_fn, tuple(zip(axis_names, dims)),
+                            width, periodic, mode, _norm_sub2(subdomains))
 
 
 def halo_scan_2d(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
@@ -443,65 +535,12 @@ def halo_scan_2d(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
                                                 jax.Array]] = None,
                  unroll: int = 1, peel: bool = True
                  ) -> Tuple[jax.Array, Optional[jax.Array]]:
-    """Double-buffered multi-step driver on a (rows x cols) mesh.
-
-    The hdot carry is (block, four face halos). Each step: (1) finish the
-    four boundary strips — the only halo consumers; (2) IMMEDIATELY launch
-    BOTH axes' ppermute pairs for step k+1 (the new block's d0 edges are
-    exactly the d0 strips; its d1 edges are the d1 strips plus the strip
-    corners, stitched corner-free); (3) only then chew through the 2-D
-    interior chunk grid. Both exchanges are therefore always in flight behind
-    the interior compute; the drain step is peeled exactly like
-    :func:`halo_scan`. Numerics identical to `steps` iterated
-    :func:`stencil_apply_2d` calls — asserted in tests."""
-    d0, d1 = dims
-    w = width
-    n, m = u.shape[d0], u.shape[d1]
-    if mode != "hdot" or n < 4 * w or m < 4 * w or steps < 1:
-        def body(u, _):
-            u_new = stencil_apply_2d(u, stencil_fn, axis_names, w, dims,
-                                     periodic, mode, subdomains)
-            return u_new, step_out_fn(u_new, u) if step_out_fn else None
-        return lax.scan(body, u, None, length=steps, unroll=unroll)
-
-    a0, a1 = axis_names
-
-    def exchange_from_strips(strips):
-        lo0_out, hi0_out, lo1_out, hi1_out = strips
-        lo0n, hi0n = exchange_edges(lo0_out, hi0_out, a0, periodic)
-        # the new block's d1 edges: strip-corner segments stitched around the
-        # d1 strips — still built from strips alone, so both ppermute pairs
-        # depart before any interior chunk is touched
-        lo_e = jnp.concatenate([_sl(lo0_out, d1, 0, w), lo1_out,
-                                _sl(hi0_out, d1, 0, w)], axis=d0)
-        hi_e = jnp.concatenate([_sl(lo0_out, d1, m - w, m), hi1_out,
-                                _sl(hi0_out, d1, m - w, m)], axis=d0)
-        lo1n, hi1n = exchange_edges(lo_e, hi_e, a1, periodic)
-        return lo0n, hi0n, lo1n, hi1n
-
-    def body(carry, _):
-        u, halos = carry
-        strips = _strips_2d(u, *halos, stencil_fn, w, dims)
-        halos_next = exchange_from_strips(strips)
-        interior = _interior_chunks_2d(u, stencil_fn, w, dims, subdomains)
-        u_new = _assemble_2d(strips, interior, dims)
-        out = step_out_fn(u_new, u) if step_out_fn else None
-        return (u_new, halos_next), out
-
-    halos0 = exchange_halo_2d(u, axis_names, w, dims, periodic)  # fill
-    if not peel:
-        (u, _), outs = lax.scan(body, (u, halos0), None, length=steps,
-                                unroll=unroll)
-        return u, outs
-    (u, halos), outs = lax.scan(body, (u, halos0), None, length=steps - 1,
-                                unroll=unroll)
-    # peeled drain: consume the carried halos, launch nothing
-    u_new = stencil_with_halo_2d(u, halos, stencil_fn, w, dims, subdomains)
-    if step_out_fn is not None:
-        outs = jax.tree.map(
-            lambda s, o: jnp.concatenate([s, o[None]], axis=0), outs,
-            step_out_fn(u_new, u))
-    return u_new, outs
+    """Double-buffered multi-step driver on a (rows x cols) mesh (see
+    :func:`halo_scan_nd` for the schedule; both axes' exchanges ride behind
+    the interior compute, and the drain step is peeled)."""
+    return halo_scan_nd(u, stencil_fn, tuple(zip(axis_names, dims)), width,
+                        steps, periodic, mode, _norm_sub2(subdomains),
+                        step_out_fn, unroll, peel)
 
 
 def multi_dim_stencil(u: jax.Array,

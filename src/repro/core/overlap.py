@@ -20,7 +20,7 @@ view of the global batch) used by the trainer and by the dry-run.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, List, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp

@@ -6,15 +6,16 @@ Each app exposes the SAME solver under the two schedules
 benchmarks can measure the overlap delta directly, and tests can assert the
 schedules are numerically identical.
 
-All solvers are shard_map'd over one mesh axis (process-level decomposition)
-and over-decompose each shard into task-level subdomains (``subdomains=`` —
-the paper's grainsize knob) for residual reductions and boundary/interior
-splits.
+All solvers are shard_map'd over the process-level decomposition — one mesh
+axis (the paper's slabs), a 2-D (rows x cols) grid mesh, or (HPCCG) a full
+3-D (x, y, z) mesh — and over-decompose each shard into task-level
+subdomains (``subdomains=`` — the paper's grainsize knob) for residual
+reductions and boundary/interior splits.
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -132,11 +133,19 @@ def _diff2_dir(padded: jax.Array, dim: int) -> jax.Array:
     return out
 
 
-def rk3_rhs(v: jax.Array, axis_name: Optional[str], mode: str,
+def rk3_rhs(v: jax.Array, axis_name, mode: str,
             nu: float = 0.05) -> jax.Array:
     """Direction-split diffusion RHS (stands in for euler_LLF_x/y/z): the three
-    per-direction stencils are independent tasks (paper Figure 5)."""
-    decomp = [(0, None), (1, None), (2, axis_name)]
+    per-direction stencils are independent tasks (paper Figure 5). `axis_name`
+    is one mesh axis (z decomposed) or a (y_axis, z_axis) pair — each
+    direction's stencil only ever needs its OWN axis's halo (direction-split
+    stencils have no cross-dim couplings), so a 2-D mesh needs no corner
+    messages at all."""
+    if isinstance(axis_name, tuple):
+        ay, az = axis_name
+        decomp = [(0, None), (1, ay), (2, az)]
+    else:
+        decomp = [(0, None), (1, None), (2, axis_name)]
     return nu * multi_dim_stencil(v, _diff2_dir, decomp, width=4,
                                   periodic=True, mode=mode)
 
@@ -151,6 +160,21 @@ def _rk3_rhs_with_halo(v: jax.Array, lo: jax.Array, hi: jax.Array,
     z = stencil_with_halo(v, lo, hi, functools.partial(_diff2_dir, dim=2),
                           width=4, dim=2, subdomains=subdomains)
     return nu * (xy + z)
+
+
+def _rk3_rhs_with_halo_2d(v: jax.Array, hy, hz, nu: float = 0.05,
+                          subdomains: int = 4) -> jax.Array:
+    """RHS with BOTH mesh axes' halos already in hand ((y, z) grid mesh):
+    the x stencil is a local-pad task; the y and z stencils each consume
+    their own carried halo pair — neither exchange sits on this stage's
+    critical path, and the per-direction interior chunks are the independent
+    work both ppermute pairs hide behind."""
+    x = multi_dim_stencil(v, _diff2_dir, [(0, None)], width=4, periodic=True)
+    y = stencil_with_halo(v, hy[0], hy[1], functools.partial(_diff2_dir, dim=1),
+                          width=4, dim=1, subdomains=subdomains)
+    z = stencil_with_halo(v, hz[0], hz[1], functools.partial(_diff2_dir, dim=2),
+                          width=4, dim=2, subdomains=subdomains)
+    return nu * (x + y + z)
 
 
 def rk3_local_step(v: jax.Array, axis_name: Optional[str], dt: float,
@@ -188,10 +212,51 @@ def rk3_local_step_pipelined(v: jax.Array, lo: jax.Array, hi: jax.Array,
     return v, lo, hi
 
 
+def rk3_local_step_pipelined_2d(v: jax.Array, hy, hz, ay: str, az: str,
+                                dt: float, subdomains: int = 4,
+                                exchange_last: bool = True):
+    """RK3 step on a (y, z) grid mesh with BOTH axes' halos carried across
+    stages: each stage consumes the pairs exchanged at the END of the
+    previous stage and launches the next y AND z exchanges the moment its
+    `v` update lands — so every ppermute pair flies behind the next stage's
+    x stencil and the y/z interior chunks. `exchange_last=False` peels the
+    drain (the solve's final stage feeds no consumer — two dead width-4
+    pairs saved per solve)."""
+    s = jnp.zeros_like(v)
+    n_stages = len(_RK3_A)
+    for i, (a, b) in enumerate(zip(_RK3_A, _RK3_B)):
+        rhs = _rk3_rhs_with_halo_2d(v, hy, hz, subdomains=subdomains)
+        s = a * s + dt * rhs
+        v = v + b * s
+        if exchange_last or i < n_stages - 1:
+            hy = exchange_halo(v, ay, width=4, dim=1, periodic=True)
+            hz = exchange_halo(v, az, width=4, dim=2, periodic=True)
+    return v, hy, hz
+
+
 @functools.lru_cache(maxsize=128)
-def _rk3_solver(mesh, axis_name: str, steps: int, dt: float, mode: str):
+def _rk3_solver(mesh, axis_name, steps: int, dt: float, mode: str):
+    two_d = isinstance(axis_name, tuple)
+    ay, az = axis_name if two_d else (None, None)
+
     def local(v):
-        if mode == "hdot" and v.shape[2] >= 16 and steps > 0:
+        if two_d and mode == "hdot" and v.shape[1] >= 16 and \
+                v.shape[2] >= 16 and steps > 0:
+            hy = exchange_halo(v, ay, width=4, dim=1, periodic=True)
+            hz = exchange_halo(v, az, width=4, dim=2, periodic=True)
+
+            def body(carry, _):
+                v, hy, hz = carry
+                return rk3_local_step_pipelined_2d(v, hy, hz, ay, az, dt), None
+
+            # drain peeled: the last step's last-stage exchanges are dead
+            (v, hy, hz), _ = lax.scan(body, (v, hy, hz), None,
+                                      length=steps - 1)
+            v, _, _ = rk3_local_step_pipelined_2d(v, hy, hz, ay, az, dt,
+                                                  exchange_last=False)
+            return v
+
+        if not two_d and mode == "hdot" and v.shape[2] >= 16 and steps > 0:
             lo, hi = exchange_halo(v, axis_name, width=4, dim=2,
                                    periodic=True)  # pipeline fill
 
@@ -210,13 +275,20 @@ def _rk3_solver(mesh, axis_name: str, steps: int, dt: float, mode: str):
         v, _ = lax.scan(body, v, None, length=steps)
         return v
 
-    f = jax.shard_map(local, mesh=mesh, in_specs=P(None, None, axis_name),
-                      out_specs=P(None, None, axis_name))
+    spec = P(None, ay, az) if two_d else P(None, None, axis_name)
+    f = jax.shard_map(local, mesh=mesh, in_specs=spec, out_specs=spec)
     return jax.jit(f)
 
 
-def rk3_solve(v0: jax.Array, mesh, axis_name: str, steps: int, dt: float = 0.05,
+def rk3_solve(v0: jax.Array, mesh, axis_name, steps: int, dt: float = 0.05,
               mode: str = "hdot") -> jax.Array:
+    """Run `steps` RK3 steps. `axis_name` selects the topology: one mesh axis
+    (the paper's z-decomposed slabs) or a (y_axis, z_axis) pair — true 2-D
+    (y, z) grid-mesh decomposition with stage-carried halos on BOTH axes
+    (each direction-split stencil consumes only its own axis's pair, so the
+    2-D mesh needs no corner messages)."""
+    if isinstance(axis_name, list):
+        axis_name = tuple(axis_name)
     return _rk3_solver(mesh, axis_name, steps, dt, mode)(v0)
 
 
@@ -265,37 +337,53 @@ def _stencil27_matvec(p: jax.Array, axis_name: Optional[str], mode: str,
                          periodic=False, mode=mode)
 
 
-def _yz_fn27(block: jax.Array) -> jax.Array:
-    """27-point apply for a block that ALREADY carries y (dim 1) and z (dim 2)
-    ghosts; only x is padded locally (global Dirichlet)."""
-    return _sum27(jnp.pad(block, ((1, 1), (0, 0), (0, 0))))
+def _chain_fn27(dims: Tuple[int, ...]):
+    """27-point apply for a block that ALREADY carries ghosts on every dim in
+    `dims` (plus width-1 padding on the last dim supplied by the caller);
+    the remaining dims are padded locally with zeros (global Dirichlet)."""
+    pads = tuple((0, 0) if d in dims else (1, 1) for d in range(3))
+
+    def fn(block: jax.Array) -> jax.Array:
+        if any(p != (0, 0) for p in pads):
+            block = jnp.pad(block, pads)
+        return _sum27(block)
+
+    return fn
 
 
-def _exchange_yz(p: jax.Array, ay: str, az: str
-                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Sequential two-hop exchange for the 2-D (y-blocks x z-blocks) mesh:
-    pad y FIRST, then exchange the z faces OF THE PADDED block — the z halo
-    planes then carry the (y,z) edge values from the diagonal rank via the
-    shared neighbor, so the 27-point diagonals are exact with face ppermutes
-    only (no corner messages). Returns (p_ypadded, lo_z, hi_z)."""
-    p1 = pad_with_halo(p, ay, 1, dim=1)
-    lo, hi = exchange_halo(p1, az, 1, dim=2, periodic=False)
-    return p1, lo, hi
+def _exchange_chain(p: jax.Array, axes: Tuple[str, ...],
+                    dims: Tuple[int, ...]
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sequential face-message exchange for an N-D process mesh (the MPI
+    ordered-exchange trick, chained): pad every decomposed dim but the last
+    IN ORDER — each pad ships the PREVIOUSLY padded block, so its face
+    messages carry the earlier dims' edge values from the diagonal ranks via
+    the shared neighbors — then exchange the LAST dim's faces of the fully
+    padded block. The final halo planes thus carry every (multi-)corner
+    coupling of the 27-point operator with face ppermutes only: one pair per
+    axis, no corner messages. Returns (p_padded, lo_last, hi_last)."""
+    for a, d in zip(axes[:-1], dims[:-1]):
+        p = pad_with_halo(p, a, 1, dim=d)
+    lo, hi = exchange_halo(p, axes[-1], 1, dim=dims[-1], periodic=False)
+    return p, lo, hi
 
 
-def _stencil27_matvec_2d(p: jax.Array, ay: str, az: str, mode: str,
-                         halos=None, subdomains: int = 4) -> jax.Array:
-    """y = A p with 2-D row-block decomposition over (y, z). `halos` is the
-    :func:`_exchange_yz` triple, pre-exchanged by the pipelined CG; the
-    interior z-chunk tasks read only the y-padded block, so just the
-    boundary-plane tasks wait on the z ppermutes."""
+def _stencil27_matvec_chain(p: jax.Array, axes: Tuple[str, ...],
+                            dims: Tuple[int, ...], mode: str,
+                            halos=None, subdomains: int = 4) -> jax.Array:
+    """y = A p with block decomposition over the mesh dims in `dims` ((y, z)
+    or (x, y, z)). `halos` is the :func:`_exchange_chain` triple,
+    pre-exchanged by the pipelined CG; the interior chunk tasks along the
+    last dim read only the pre-padded block, so just the boundary-plane
+    tasks wait on the final ppermute pair."""
     if halos is None:
-        halos = _exchange_yz(p, ay, az)
+        halos = _exchange_chain(p, axes, dims)
     p1, lo, hi = halos
+    fn = _chain_fn27(dims)
     if mode == "hdot":
-        return stencil_with_halo(p1, lo, hi, _yz_fn27, width=1, dim=2,
+        return stencil_with_halo(p1, lo, hi, fn, width=1, dim=dims[-1],
                                  subdomains=subdomains)
-    return _yz_fn27(jnp.concatenate([lo, p1, hi], axis=2))
+    return fn(jnp.concatenate([lo, p1, hi], axis=dims[-1]))
 
 
 def _ddot(a: jax.Array, b: jax.Array, axis_name: Optional[str],
@@ -313,19 +401,24 @@ def _ddot(a: jax.Array, b: jax.Array, axis_name: Optional[str],
 
 @functools.lru_cache(maxsize=128)
 def _hpccg_solver(mesh, axis_name, iters: int, mode: str, subdomains: int):
-    two_d = isinstance(axis_name, tuple)
-    ay, az = axis_name if two_d else (None, None)
+    chained = isinstance(axis_name, tuple)
+    if chained:
+        axes = tuple(axis_name)
+        # trailing grid dims carry the mesh: (y, z) for a pair, (x, y, z)
+        # for a full 3-D mesh
+        cdims = tuple(range(3 - len(axes), 3))
+        assert 2 <= len(axes) <= 3, axis_name
 
     def matvec(p, halos):
-        if two_d:
-            return _stencil27_matvec_2d(p, ay, az, mode, halos=halos,
-                                        subdomains=subdomains)
+        if chained:
+            return _stencil27_matvec_chain(p, axes, cdims, mode, halos=halos,
+                                           subdomains=subdomains)
         return _stencil27_matvec(p, axis_name, mode, halos=halos,
                                  subdomains=subdomains)
 
     def next_halos(p):
-        if two_d:
-            return _exchange_yz(p, ay, az)
+        if chained:
+            return _exchange_chain(p, axes, cdims)
         return exchange_halo(p, axis_name, width=1, dim=2, periodic=False)
 
     def local(b_loc):
@@ -369,7 +462,10 @@ def _hpccg_solver(mesh, axis_name, iters: int, mode: str, subdomains: int):
         (x, r, p, rtrans), hist = lax.scan(body, (x, r, p, rtrans), None, length=iters)
         return x, hist
 
-    spec = P(None, ay, az) if two_d else P(None, None, axis_name)
+    if chained:
+        spec = P(*((None,) * (3 - len(axes)) + axes))
+    else:
+        spec = P(None, None, axis_name)
     f = jax.shard_map(local, mesh=mesh, in_specs=spec, out_specs=(spec, P()))
     return jax.jit(f)
 
@@ -380,9 +476,12 @@ def hpccg_solve(b: jax.Array, mesh, axis_name, iters: int,
     taskifies ddot/waxpby/sparsemv — here each is an over-decomposed op).
     Returns (x, residual-norm history).
 
-    `axis_name` is one mesh axis (z-stacked slabs) or a (y_axis, z_axis)
-    pair — 2-D row-block decomposition of the grid with the sequential
-    two-hop exchange carrying the 27-point corner couplings.
+    `axis_name` is one mesh axis (z-stacked slabs), a (y_axis, z_axis) pair,
+    or an (x_axis, y_axis, z_axis) triple — HPCCG's native full 3-D mesh.
+    Multi-axis topologies use the sequential face-message chain
+    (:func:`_exchange_chain`): each earlier dim is padded in order on the
+    already-padded block, so the last dim's halo planes carry every corner
+    coupling of the 27-point operator with one face ppermute pair per axis.
 
     hdot mode pipelines the matvec halo: the exchange(s) for iteration k+1
     are launched the moment p_{k+1} is formed, so they ride behind the two

@@ -1,7 +1,6 @@
 """jit'd wrapper for the blocked red-black Gauss-Seidel sweep."""
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

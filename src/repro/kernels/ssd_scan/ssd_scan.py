@@ -13,8 +13,7 @@ q chosen as a multiple of 128 in production configs).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

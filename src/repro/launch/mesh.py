@@ -42,17 +42,25 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
 
 
 GRID_AXES = ("rows", "cols")
+GRID_AXES_3D = ("planes", "rows", "cols")
 
 
-def make_grid_mesh(rows: int, cols: int,
-                   axes: Tuple[str, str] = GRID_AXES) -> Mesh:
-    """(rows x cols) process mesh for 2-D domain decomposition (the HDOT
-    partition scheme applied on both grid dims at process level; the halo
-    machinery reuses the same scheme for its task-level chunk grid). A
-    trailing size-1 axis keeps the full 2-D code path alive on 1-D layouts —
-    (4, 1) and (1, 4) are the slab topologies expressed in the 2-D scheme,
-    so benchmarks can track the 2x2-vs-4x1 overlap gap on equal footing."""
-    return jax.make_mesh((rows, cols), axes, **_auto_kw(2))
+def make_grid_mesh(*shape: int, axes: Optional[Tuple[str, ...]] = None) -> Mesh:
+    """N-D process mesh for hierarchical domain decomposition (the HDOT
+    partition scheme applied on every grid dim at process level; the halo
+    machinery reuses the same scheme for its task-level chunk grid).
+
+    ``make_grid_mesh(rows, cols)`` is the 2-D (rows x cols) mesh;
+    ``make_grid_mesh(planes, rows, cols)`` the 3-D mesh HPCCG's native grid
+    decomposes onto. Size-1 axes keep the full N-D code path alive on lower-
+    dimensional layouts — (4, 1) and (1, 4) are the slab topologies expressed
+    in the 2-D scheme, (4, 2, 1) a 2-D topology in the 3-D scheme — so
+    benchmarks can track topology gaps on equal footing."""
+    if axes is None:
+        assert len(shape) in (2, 3), shape
+        axes = GRID_AXES if len(shape) == 2 else GRID_AXES_3D
+    assert len(axes) == len(shape), (shape, axes)
+    return jax.make_mesh(tuple(shape), tuple(axes), **_auto_kw(len(shape)))
 
 
 def make_single_device_mesh(axes: Tuple[str, ...] = ("data", "model")) -> Mesh:

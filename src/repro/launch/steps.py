@@ -9,7 +9,7 @@ production would run.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,10 +17,9 @@ import jax.numpy as jnp
 from repro.checkpoint.elastic import shardings_for
 from repro.config.base import ModelConfig, ParallelConfig
 from repro.config.shapes import ShapeConfig
-from repro.core.overlap import accumulate_grads, grad_sync
+from repro.core.overlap import accumulate_grads
 from repro.models.model import LanguageModel, ModelOptions, build_model, input_specs
-from repro.models.layers import abstract_from_specs, axes_from_specs
-from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+from repro.optim import AdamWConfig, adamw_update, warmup_cosine
 from repro.sharding.rules import ShardingContext, use_sharding
 
 PyTree = Any

@@ -11,7 +11,6 @@ injected/real failure resumes from the latest checkpoint (exact data order).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 from typing import Optional
 
 from repro.config.base import ParallelConfig, RunConfig, TrainConfig

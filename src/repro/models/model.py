@@ -11,15 +11,13 @@ point so the multi-pod dry-run lowers without allocating anything.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.config.base import ModelConfig, ParallelConfig
+from repro.config.base import ModelConfig
 from repro.config.shapes import ShapeConfig
-from repro.models import attention as attn
 from repro.models import transformer as tfm
 from repro.models.layers import (
     ParamSpec,
@@ -27,9 +25,6 @@ from repro.models.layers import (
     axes_from_specs,
     init_from_specs,
     layer_norm,
-    mlp_apply,
-    mlp_specs,
-    rms_norm,
     sinusoidal_embedding,
 )
 from repro.sharding.rules import with_logical

@@ -11,7 +11,6 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.config.base import ModelConfig
 from repro.kernels.ssd_scan import ops as ssd_ops

@@ -7,7 +7,6 @@ only mode for heterogeneous stacks: hybrid patterns, encoder-decoder).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

@@ -8,7 +8,7 @@ reduction happens in the train step (GSPMD FSDP or core.overlap schedules).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

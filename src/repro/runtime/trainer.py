@@ -15,7 +15,6 @@ implicitly (GSPMD). On a 1-device CPU mesh the same code runs unsharded
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Any, Callable, Dict, Optional
 

@@ -3,11 +3,19 @@ is reserved for the dry-run and the benchmark subprocess workers."""
 from __future__ import annotations
 
 import os
+import re
 
-# Guard: if a stray XLA_FLAGS leaked in, tests would silently exercise the
-# wrong configuration.
-assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
-    "tests must run with the default single CPU device"
+# Guard: the in-process suite must see the default single CPU device. CI
+# exports XLA_FLAGS=--xla_force_host_platform_device_count=8 at the job level
+# (for ad-hoc scripts and the benchmark drivers), so strip the forcing flag
+# here — before jax initializes its backend — instead of failing outright.
+# The multi-device subprocess workers are unaffected: run_devices() in
+# test_system.py and benchmarks/_util.run_worker() overwrite XLA_FLAGS in the
+# child environment with their own device counts.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" in _flags:
+    os.environ["XLA_FLAGS"] = re.sub(
+        r"--xla_force_host_platform_device_count=\d+", "", _flags).strip()
 
 import jax
 import pytest

@@ -12,7 +12,6 @@ import pytest
 
 from repro.config.registry import get_arch
 from repro.models import attention as attn
-from repro.models.model import ModelOptions, build_model
 
 
 def _qkv(b=2, s=128, hq=4, hkv=2, d=32):

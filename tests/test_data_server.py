@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import jax
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.data.pipeline import SyntheticLMDataset

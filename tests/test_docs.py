@@ -6,8 +6,6 @@ from __future__ import annotations
 
 from pathlib import Path
 
-import pytest
-
 REPO = Path(__file__).resolve().parents[1]
 
 
@@ -46,14 +44,33 @@ def test_bench_table_not_stale():
 
 def test_bench_quick_tracks_2d_mesh_rows():
     """The committed trajectory must include `mesh_shape` rows for heat2d and
-    hpccg (the 2x2-vs-4x1 overlap gap is tracked from PR 3 onward)."""
+    hpccg (the 2x2-vs-4x1 overlap gap is tracked from PR 3 onward), the RK3
+    (y, z) 2x2 mesh, and HPCCG's native 3-D 2x2x2 mesh (PR 4 onward)."""
     from benchmarks import docs_sync
 
     quick = docs_sync.load_quick()
+
+    def meshes(suite):
+        return {r.get("mesh_shape") for r in quick[suite]["rows"]
+                if "mesh_shape" in r}
+
     for suite in ("heat2d", "hpccg"):
-        rows = quick[suite]["rows"]
-        meshes = {r.get("mesh_shape") for r in rows if "mesh_shape" in r}
-        assert {"2x2", "4x1"} <= meshes, (suite, meshes)
+        assert {"2x2", "4x1"} <= meshes(suite), (suite, meshes(suite))
+    assert "2x2" in meshes("creams"), meshes("creams")
+    assert "2x2x2" in meshes("hpccg"), meshes("hpccg")
+
+
+def test_bench_quick_rows_carry_provenance():
+    """Every BENCH_quick row records the worker's jax version and device
+    count — CI artifacts from different runners are only comparable with
+    the toolchain pinned to the row."""
+    from benchmarks import docs_sync
+
+    quick = docs_sync.load_quick()
+    for suite, rec in quick.items():
+        for r in rec.get("rows", []):
+            assert r.get("jax_version"), (suite, r)
+            assert r.get("device_count") == r.get("devices"), (suite, r)
 
 
 def test_render_table_shape():

@@ -3,13 +3,10 @@ the single partition scheme must tile exactly at every level, and the
 boundary/halo accounting must match the paper's published Table 1."""
 from __future__ import annotations
 
-import math
-
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.domain import (Box, Domain, decompose_grid, halo_cells,
+from repro.core.domain import (Domain, decompose_grid, halo_cells,
                                halo_fraction)
 
 dims = st.integers(min_value=1, max_value=64)

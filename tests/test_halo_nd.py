@@ -1,0 +1,182 @@
+"""N-D decomposition machinery, single-device (the 2x2x2 / 4x2x1 real-mesh
+equivalences live in test_system.py). The safety property is the same at
+every depth of the hierarchy: every schedule/knob/topology must be
+numerically identical to the two-phase oracle — including the corner and
+edge cells, which the corner-free exchange must still get right for star
+stencils on all three axes at once."""
+from __future__ import annotations
+
+import functools
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core.domain import interior_boxes
+from repro.core.halo import (exchange_halo_nd, halo_scan_nd,
+                             pad_with_halo_nd, stencil_apply_nd,
+                             stencil_with_halo_nd)
+
+AXES3 = ("planes", "rows", "cols")
+DECOMP3 = tuple(zip(AXES3, (0, 1, 2)))
+
+
+@pytest.fixture(scope="module")
+def grid_mesh3():
+    from repro.launch.mesh import make_grid_mesh
+
+    return make_grid_mesh(1, 1, 1)
+
+
+def _star3_fn(width: int):
+    """Separable 3-D star stencil of `width` (reads the full 3-axis cross,
+    never a corner). Input padded by `width` on all three dims; returns the
+    un-padded update."""
+    def fn(p):
+        w = width
+        n0, n1, n2 = (s - 2 * w for s in p.shape)
+        acc = 0.0
+        for d in range(-w, w + 1):
+            acc = (acc
+                   + p[w + d:w + d + n0, w:w + n1, w:w + n2]
+                   + p[w:w + n0, w + d:w + d + n1, w:w + n2]
+                   + p[w:w + n0, w:w + n1, w + d:w + d + n2])
+        return acc / (3 * (2 * w + 1))
+    return fn
+
+
+def _shmap(fn, mesh):
+    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=(P(*AXES3),),
+                                 out_specs=P(*AXES3)))
+
+
+def test_interior_boxes_partition_3d():
+    """The task-level chunk grid tiles exactly the interior of the block —
+    the process partition scheme applied one level down, in 3-D."""
+    shape, w, grid = (13, 11, 9), 2, (3, 2, 2)
+    boxes = interior_boxes(shape, w, grid)
+    assert len(boxes) == 12
+    cells = set()
+    for b in boxes:
+        for idx in itertools.product(*(range(a, o) for a, o in
+                                       zip(b.start, b.stop))):
+            assert idx not in cells
+            cells.add(idx)
+    want = set(itertools.product(*(range(w, s - w) for s in shape)))
+    assert cells == want
+
+
+@pytest.mark.parametrize("subdomains", [(1, 1, 1), (2, 2, 2), (3, 2, 1), 2,
+                                        (8, 8, 8)])
+@pytest.mark.parametrize("periodic", [False, True])
+def test_stencil_hdot_nd_matches_two_phase(grid_mesh3, subdomains, periodic):
+    """The 3-D chunk-grid knob must not change numerics for any grainsize."""
+    u = jax.random.normal(jax.random.PRNGKey(0), (16, 14, 12), jnp.float32)
+    fn = _star3_fn(1)
+    want = _shmap(lambda x: stencil_apply_nd(
+        x, fn, DECOMP3, 1, periodic, "two_phase"), grid_mesh3)(u)
+    got = _shmap(lambda x: stencil_apply_nd(
+        x, fn, DECOMP3, 1, periodic, "hdot", subdomains), grid_mesh3)(u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["hdot", "two_phase"])
+@pytest.mark.parametrize("width,shape", [(1, (11, 9, 13)), (1, (12, 10, 8)),
+                                         (2, (13, 11, 10))])
+def test_halo_scan_nd_equals_iterated_apply(grid_mesh3, mode, width, shape):
+    """halo_scan_nd(steps=k) == k iterated 3-D applies, odd AND even
+    extents, both schedules."""
+    steps = 3
+    u = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
+    fn = _star3_fn(width)
+
+    got, _ = jax.jit(jax.shard_map(
+        lambda x: halo_scan_nd(x, fn, DECOMP3, width, steps, periodic=True,
+                               mode=mode, subdomains=(2, 2, 1)),
+        mesh=grid_mesh3, in_specs=(P(*AXES3),),
+        out_specs=(P(*AXES3), P())))(u)
+
+    def iterate(x):
+        for _ in range(steps):
+            x = stencil_apply_nd(x, fn, DECOMP3, width, True, "two_phase")
+        return x
+
+    want = _shmap(iterate, grid_mesh3)(u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_stencil_with_halo_nd_uses_given_halos():
+    """Pre-exchanged face halos (random, not wrap-around) flow into the
+    right cells — including every edge/corner region, via the corner-free
+    face assembly."""
+    k = jax.random.PRNGKey(2)
+    u = jax.random.normal(k, (12, 10, 14), jnp.float32)
+    halos = []
+    for d, s in enumerate(u.shape):
+        shp = list(u.shape)
+        shp[d] = 1
+        halos.append(
+            (jax.random.normal(jax.random.fold_in(k, 2 * d + 1), shp),
+             jax.random.normal(jax.random.fold_in(k, 2 * d + 2), shp)))
+    fn = _star3_fn(1)
+    got = jax.jit(functools.partial(stencil_with_halo_nd, stencil_fn=fn,
+                                    width=1, dims=(0, 1, 2),
+                                    subdomains=(2, 1, 3)))(u, halos)
+    want = fn(pad_with_halo_nd(u, halos, 1, (0, 1, 2)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_exchange_halo_nd_periodic_wraps_own_edges(grid_mesh3):
+    """Size-1 axes: periodic wraps each dim's own edges (the N-D analogue of
+    the 1-D single-rank contract)."""
+    u = jnp.arange(2.0 * 3 * 4).reshape(2, 3, 4)
+
+    def ex(x):
+        halos = exchange_halo_nd(x, DECOMP3, 1, periodic=True)
+        return tuple(h for pair in halos for h in pair)
+
+    out = jax.jit(jax.shard_map(
+        ex, mesh=grid_mesh3, in_specs=(P(*AXES3),),
+        out_specs=tuple(P(*AXES3) for _ in range(6))))(u)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(u[-1:]))
+    np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(u[:1]))
+    np.testing.assert_array_equal(np.asarray(out[2]), np.asarray(u[:, -1:]))
+    np.testing.assert_array_equal(np.asarray(out[4]),
+                                  np.asarray(u[:, :, -1:]))
+
+
+def test_rk3_2d_mesh_matches_slab(grid_mesh3):
+    """rk3_solve on a 1x1 (rows, cols) topology == the z-slab solver, both
+    schedules (stage-carried halos on BOTH axes)."""
+    from repro.core.stencil import rk3_solve
+    from repro.launch.mesh import make_grid_mesh, make_mesh
+
+    v0 = jax.random.normal(jax.random.PRNGKey(3), (12, 20, 32), jnp.float32)
+    want = rk3_solve(v0, make_mesh((1,), ("data",)), "data", 4, dt=0.01,
+                     mode="two_phase")
+    for mode in ("two_phase", "hdot"):
+        got = rk3_solve(v0, make_grid_mesh(1, 1), ("rows", "cols"), 4,
+                        dt=0.01, mode=mode)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_hpccg_3d_mesh_matches_slab(grid_mesh3):
+    """CG on the full (x, y, z) topology converges identically to the z-slab
+    solver — exercises the chained sequential exchange end to end."""
+    from repro.core.stencil import hpccg_solve
+    from repro.launch.mesh import make_mesh
+
+    b = jax.random.normal(jax.random.PRNGKey(4), (10, 12, 12), jnp.float32)
+    _, h_want = hpccg_solve(b, make_mesh((1,), ("data",)), "data", 15,
+                            mode="two_phase")
+    for mode in ("two_phase", "hdot"):
+        _, h = hpccg_solve(b, grid_mesh3, AXES3, 15, mode=mode)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h_want),
+                                   rtol=1e-4)

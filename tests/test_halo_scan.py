@@ -12,8 +12,8 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.core.halo import (exchange_edges, exchange_halo, halo_scan,
-                             stencil_apply, stencil_with_halo)
+from repro.core.halo import (exchange_halo, halo_scan, stencil_apply,
+                             stencil_with_halo)
 
 
 @pytest.fixture(scope="module")

@@ -12,7 +12,6 @@ from _hypothesis_compat import given, settings, st
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention import ref as fa_ref
 from repro.kernels.heat2d import ops as heat_ops
-from repro.kernels.heat2d import ref as heat_ref
 from repro.kernels.lru_scan import ops as lru_ops
 from repro.kernels.lru_scan import ref as lru_ref
 from repro.kernels.ssd_scan import ops as ssd_ops

@@ -8,7 +8,7 @@ import pytest
 
 from repro.config.base import ParallelConfig
 from repro.config.registry import get_arch, list_archs
-from repro.config.shapes import SHAPES, cell_is_runnable, shape_by_name
+from repro.config.shapes import cell_is_runnable, shape_by_name
 from repro.launch.steps import build_cell
 from repro.models.model import ModelOptions, input_specs
 
@@ -47,7 +47,6 @@ def test_cell_smoke_runs_on_single_device(single_mesh):
     import dataclasses
 
     from repro.config.shapes import ShapeConfig
-    from repro.models.layers import init_from_specs
 
     cfg = dataclasses.replace(get_arch("internlm2-1.8b").reduced(),
                               num_layers=2)

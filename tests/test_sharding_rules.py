@@ -8,8 +8,8 @@ import pytest
 from _hypothesis_compat import given, settings, st
 from jax.sharding import PartitionSpec as P
 
-from repro.sharding.rules import (DEFAULT_RULES, ShardingContext,
-                                  resolve_pspec, use_sharding, with_logical)
+from repro.sharding.rules import (ShardingContext, resolve_pspec,
+                                  use_sharding, with_logical)
 
 
 @pytest.fixture(scope="module")

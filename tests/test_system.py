@@ -10,7 +10,6 @@ import sys
 import textwrap
 from pathlib import Path
 
-import numpy as np
 import pytest
 
 REPO = Path(__file__).resolve().parents[1]
@@ -340,6 +339,130 @@ def test_heat2d_kernel_sharded_2x2_matches_unsharded():
     """
     r = run_devices(code, 4)
     assert r == {"same": True}
+
+
+@pytest.mark.slow
+def test_rk3_2d_mesh_matches_1dev_oracle():
+    """RK3 on (y, z) grid meshes — stage-carried halos on BOTH axes — gives
+    the same field as the 1-device two-phase oracle, both schedules (2x2
+    exercises the pipelined two-axis path: 32-cell shards >= 4*width)."""
+    code = """
+    import json, jax, jax.numpy as jnp, numpy as np
+    from repro.core.stencil import rk3_solve
+    from repro.launch.mesh import make_grid_mesh, make_mesh
+    v0 = jax.random.normal(jax.random.PRNGKey(0), (12, 64, 64), jnp.float32)
+    ref = rk3_solve(v0, make_mesh((1,), ("data",)), "data", 5, dt=0.01,
+                    mode="two_phase")
+    ok = {}
+    for rc in ((2, 2), (4, 1), (1, 4)):
+        for mode in ("two_phase", "hdot"):
+            got = rk3_solve(v0, make_grid_mesh(*rc), ("rows", "cols"), 5,
+                            dt=0.01, mode=mode)
+            ok[f"{rc[0]}x{rc[1]}-{mode}"] = bool(
+                np.allclose(np.asarray(got), np.asarray(ref),
+                            rtol=2e-5, atol=2e-5))
+    print(json.dumps(ok))
+    """
+    r = run_devices(code, 4)
+    assert all(r.values()), r
+
+
+@pytest.mark.slow
+def test_hpccg_3d_mesh_matches_1dev_oracle():
+    """CG on HPCCG's native (x, y, z) meshes: ALL the 27-point corner
+    couplings — edges and the 8 body corners — ride the chained sequential
+    face exchange; convergence identical to 1 device on 2x2x2 and the
+    degenerate-axis 4x2x1 / 1x2x4 layouts, with odd per-shard extents
+    (12/4=3, 20/4=5, 20/2=10)."""
+    code = """
+    import json, jax, jax.numpy as jnp, numpy as np
+    from repro.core.stencil import hpccg_solve
+    from repro.launch.mesh import make_grid_mesh, make_mesh
+    b = jax.random.normal(jax.random.PRNGKey(2), (12, 20, 20), jnp.float32)
+    _, href = hpccg_solve(b, make_mesh((1,), ("data",)), "data", 20,
+                          mode="two_phase")
+    ok = {}
+    for parts in ((2, 2, 2), (4, 2, 1), (1, 2, 4)):
+        for mode in ("two_phase", "hdot"):
+            _, h = hpccg_solve(b, make_grid_mesh(*parts),
+                               ("planes", "rows", "cols"), 20, mode=mode)
+            ok[f"{'x'.join(map(str, parts))}-{mode}"] = bool(
+                np.allclose(np.asarray(h), np.asarray(href), rtol=1e-3))
+    print(json.dumps(ok))
+    """
+    r = run_devices(code, 8)
+    assert all(r.values()), r
+
+
+@pytest.mark.slow
+def test_halo_scan_nd_peeled_ppermute_count_8dev():
+    """3-D halo_scan_nd: one ppermute pair per axis per step, drain peeled.
+    Fully unrolled, a steps-step hdot scan on a 2x2x2 mesh compiles to
+    exactly 3 pairs * steps = 6*steps collective-permutes (fill pairs +
+    steps-1 in-flight pair sets). XLA reaps the unpeeled schedule's dead
+    drain pairs only when unrolled; the production while-loop lowering would
+    execute them, which is what the peel removes — so at steps=2 the peeled
+    scan must inline (length-1 scan, no `while`) while the unpeeled one
+    keeps a loop just to run the drain trip."""
+    code = """
+    import json, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.analysis.hlo import count_ops
+    from repro.core.halo import halo_scan_nd
+    from repro.launch.mesh import make_grid_mesh
+    mesh = make_grid_mesh(2, 2, 2)
+    AXES = ("planes", "rows", "cols")
+    DEC = tuple(zip(AXES, (0, 1, 2)))
+    def star(p):
+        return (p[1:-1, 1:-1, 1:-1] + p[:-2, 1:-1, 1:-1] + p[2:, 1:-1, 1:-1]
+                + p[1:-1, :-2, 1:-1] + p[1:-1, 2:, 1:-1]
+                + p[1:-1, 1:-1, :-2] + p[1:-1, 1:-1, 2:]) / 7.0
+    def lower(steps, peel, unroll=1):
+        f = jax.jit(jax.shard_map(
+            lambda x: halo_scan_nd(x, star, DEC, 1, steps, periodic=True,
+                                   peel=peel, unroll=unroll)[0],
+            mesh=mesh, in_specs=(P(*AXES),), out_specs=P(*AXES)))
+        return f.lower(jnp.ones((8, 8, 8), jnp.float32)).compile().as_text()
+    out = {}
+    out["unrolled_eq_6steps"] = all(
+        count_ops(lower(s, peel=True, unroll=s), "collective-permute")
+        == 6 * s for s in (2, 3))
+    out["peeled_no_while"] = count_ops(lower(2, True), "while") == 0
+    out["unpeeled_while"] = count_ops(lower(2, False), "while") == 1
+    print(json.dumps(out))
+    """
+    r = run_devices(code, 8)
+    assert all(r.values()), r
+
+
+@pytest.mark.slow
+def test_solver_ppermute_counts_nd():
+    """Compiled-solver collective structure on real meshes: one exchange
+    pair per decomposed axis per step/stage, and NO dead drain exchange.
+
+    * hpccg (2,2,2), iters=2 (scan inlines): fill chain (3 pairs) + one
+      in-scan chain (3 pairs) = 12 collective-permutes — the peeled final
+      iteration launches nothing.
+    * rk3 (2,2), steps=2: fill (2 pairs) + 3 stages * 2 pairs + drain step's
+      2 non-final stages * 2 pairs = 12 pairs = 24 permutes — the final
+      stage's two pairs are peeled (unpeeled would be 28)."""
+    code = """
+    import json, jax, jax.numpy as jnp
+    from repro.analysis.hlo import count_ops
+    from repro.core.stencil import _hpccg_solver, _rk3_solver
+    from repro.launch.mesh import make_grid_mesh
+    out = {}
+    f = _hpccg_solver(make_grid_mesh(2, 2, 2), ("planes", "rows", "cols"),
+                      2, "hdot", 4)
+    txt = f.lower(jnp.ones((12, 20, 20), jnp.float32)).compile().as_text()
+    out["hpccg_3d_cp"] = count_ops(txt, "collective-permute")
+    f = _rk3_solver(make_grid_mesh(2, 2), ("rows", "cols"), 2, 0.01, "hdot")
+    txt = f.lower(jnp.ones((12, 32, 32), jnp.float32)).compile().as_text()
+    out["rk3_2d_cp"] = count_ops(txt, "collective-permute")
+    print(json.dumps(out))
+    """
+    r = run_devices(code, 8)
+    assert r == {"hpccg_3d_cp": 12, "rk3_2d_cp": 24}, r
 
 
 @pytest.mark.slow
