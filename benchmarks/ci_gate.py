@@ -1,9 +1,10 @@
 """CI gate on the committed overlap trajectory.
 
 Reads BENCH_quick.json (as written by ``python -m benchmarks.run --quick``)
-and FAILS (exit 1) when any suite's headline ``hdot_two_phase_ratio*`` drops
-below ``--min-ratio`` — i.e. when the HDOT schedule has become slower than
-the two-phase baseline it exists to beat. Suites that errored fail the gate
+and FAILS (exit 1) when any suite's headline ratio (``hdot_two_phase_ratio*``
+per topology, plus lm_step's ZeRO-3 ``fsdp_two_phase_ratio``) drops below
+``--min-ratio`` — i.e. when an HDOT schedule has become slower than the
+two-phase baseline it exists to beat. Suites that errored fail the gate
 outright.
 
 Run:  python -m benchmarks.ci_gate [--min-ratio 1.0] [--path BENCH_quick.json]
@@ -18,7 +19,7 @@ from pathlib import Path
 from benchmarks._util import REPO
 
 HEADLINE_KEYS = ("hdot_two_phase_ratio", "hdot_two_phase_ratio_2d",
-                 "hdot_two_phase_ratio_3d")
+                 "hdot_two_phase_ratio_3d", "fsdp_two_phase_ratio")
 
 
 def check(quick: dict, min_ratio: float) -> list:

@@ -2,9 +2,16 @@
 
 The paper's halo exchange maps onto gradient synchronization for LM training
 (DESIGN §2): two-phase = one monolithic flattened all-reduce after the whole
-backward; HDOT = size-balanced per-bucket reductions free to interleave with
-backward compute. Measured on N virtual devices with a reduced qwen3-8b under
-shard_map (manual DP), plus collective structure from the compiled HLO.
+backward; HDOT = layer-boundary per-bucket reductions emitted last-backward-
+first, free to interleave with backward compute. Measured on N virtual
+devices with a reduced qwen3-8b under shard_map (manual DP), plus collective
+structure from the compiled HLO.
+
+The `fsdp` row is the ZeRO-3 composition of the same schedule: params live as
+bucket-wise flat shards (1/devices residency), all-gathered forward-order at
+the top of the step and reduce-scattered reverse-topologically in the
+backward — same loss/backward as the other modes, so the ratio tracks what
+the bucket-wise gather/scatter costs over the replicated bucketed sync.
 """
 from __future__ import annotations
 
@@ -21,7 +28,9 @@ def worker(devices: int, steps: int) -> Dict[str, Any]:
     from benchmarks._util import timeit
     from repro.analysis.hlo import parse_collectives
     from repro.config.registry import get_arch
-    from repro.core.overlap import grad_sync
+    from repro.core.overlap import (fsdp_all_gather, fsdp_layout,
+                                    fsdp_shard_full, grad_sync,
+                                    grad_sync_fsdp)
     from repro.launch.mesh import make_mesh
     from repro.models.model import ModelOptions, build_model
 
@@ -38,12 +47,14 @@ def worker(devices: int, steps: int) -> Dict[str, Any]:
 
     out: Dict[str, Any] = {"devices": devices, "arch": cfg.name,
                            "batch": B, "seq": S}
+    layers = model.param_layers()
     grads_by_mode = {}
     for mode in ("two_phase", "hdot"):
         def step(params, batch, mode=mode):
             def local(p, b):
                 loss, g = jax.value_and_grad(model.train_loss)(p, b)
-                g = grad_sync(g, "data", mode=mode, num_buckets=8)
+                g = grad_sync(g, "data", mode=mode, num_buckets=8,
+                              layers=layers)
                 return jax.lax.pmean(loss, "data"), g
 
             return jax.shard_map(
@@ -54,15 +65,57 @@ def worker(devices: int, steps: int) -> Dict[str, Any]:
         f = jax.jit(step)
         sec = timeit(f, params, batch)
         loss, g = f(params, batch)
-        grads_by_mode[mode] = jax.tree.leaves(g)[0]
+        grads_by_mode[mode] = g
         coll = parse_collectives(f.lower(params, batch).compile().as_text())
         out[mode] = {"seconds": sec, "steps_per_s": 1.0 / sec,
                      "loss": float(loss),
                      "allreduce_ops": coll.by_kind().get("all-reduce", (0, 0))[0],
                      "wire_bytes": coll.total_wire_bytes}
-    out["grads_identical"] = bool(np.allclose(
-        np.asarray(grads_by_mode["two_phase"], np.float32),
-        np.asarray(grads_by_mode["hdot"], np.float32), rtol=1e-5, atol=1e-5))
+    def trees_close(a, b):
+        return bool(all(
+            np.allclose(np.asarray(x, np.float32), np.asarray(y, np.float32),
+                        rtol=1e-5, atol=1e-5)
+            for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))))
+
+    out["grads_identical"] = trees_close(grads_by_mode["two_phase"],
+                                         grads_by_mode["hdot"])
+
+    # ZeRO-3 composition: bucket-wise AG (forward order) + RS (reverse-topo),
+    # same loss/backward — params enter as 1/devices flat shards
+    layout = fsdp_layout(params, devices, 8, layers=layers)
+    pflat = {k: jax.device_put(
+        v, jax.sharding.NamedSharding(mesh, P("data")))
+        for k, v in fsdp_shard_full(params, layout).items()}
+    flat_specs = {k: P("data") for k in layout.keys}
+
+    def step_fsdp(pflat, batch):
+        def local(pf, b):
+            p = fsdp_all_gather(pf, layout, "data")
+            loss, g = jax.value_and_grad(model.train_loss)(p, b)
+            gf = grad_sync_fsdp(g, layout, "data")
+            return jax.lax.pmean(loss, "data"), gf
+
+        return jax.shard_map(
+            local, mesh=mesh, in_specs=(flat_specs, P("data")),
+            out_specs=(P(), flat_specs), check_vma=False)(pflat, batch)
+
+    f = jax.jit(step_fsdp)
+    sec = timeit(f, pflat, batch)
+    loss, gf = f(pflat, batch)
+    coll = parse_collectives(f.lower(pflat, batch).compile().as_text())
+    kinds = coll.by_kind()
+    out["fsdp"] = {"seconds": sec, "steps_per_s": 1.0 / sec,
+                   "loss": float(loss),
+                   "reduce_scatter_ops": kinds.get("reduce-scatter", (0, 0))[0],
+                   "all_gather_ops": kinds.get("all-gather", (0, 0))[0],
+                   "wire_bytes": coll.total_wire_bytes}
+    # the scattered grad shards, reassembled, must equal the hdot/two_phase
+    # full sync on EVERY leaf (the same sum, reduce-scattered instead of
+    # all-reduced) — an offset bug in any flat buffer shows up here
+    from repro.core.overlap import fsdp_unshard_full
+
+    out["fsdp_grads_identical"] = trees_close(
+        fsdp_unshard_full(gf, layout), grads_by_mode["two_phase"])
 
     # hierarchical (pod x data) reduction with int8-EF cross-pod compression:
     # wire bytes on the slow hop drop 4x vs fp32 / 2x vs bf16 (DESIGN §4)

@@ -70,8 +70,8 @@ def _schedule_rates(row: dict):
                 if k in row["two_phase"]), None)
     if key is not None:
         return key, row["two_phase"][key], row["hdot"][key]
-    return "ops_per_s", 1.0 / row["two_phase"]["seconds"], \
-        1.0 / row["hdot"]["seconds"]
+    return ("ops_per_s", 1.0 / row["two_phase"]["seconds"],
+            1.0 / row["hdot"]["seconds"])
 
 
 def _quick_record(records: dict) -> dict:
@@ -95,6 +95,11 @@ def _quick_record(records: dict) -> dict:
             row = {"devices": r.get("devices"), "metric": key,
                    "two_phase": tp, "hdot": hd,
                    "hdot_two_phase_ratio": hd / tp}
+            if "fsdp" in r:   # ZeRO-3 composition of the bucketed schedule
+                fs = (r["fsdp"][key] if key in r["fsdp"]
+                      else 1.0 / r["fsdp"]["seconds"])
+                row["fsdp"] = fs
+                row["fsdp_two_phase_ratio"] = fs / tp
             # runner provenance (stamped by _util.emit in every worker):
             # artifacts from different CI runners are only comparable when
             # the toolchain + device count travel with the row
@@ -117,6 +122,9 @@ def _quick_record(records: dict) -> dict:
             entry["hdot_two_phase_ratio_2d"] = mesh2[-1]["hdot_two_phase_ratio"]
         if mesh3:
             entry["hdot_two_phase_ratio_3d"] = mesh3[-1]["hdot_two_phase_ratio"]
+        fsdp = [r for r in rows if "fsdp_two_phase_ratio" in r]
+        if fsdp:   # lm_step ZeRO-3 headline, gated like the others
+            entry["fsdp_two_phase_ratio"] = fsdp[-1]["fsdp_two_phase_ratio"]
         out[short] = entry
     return out
 

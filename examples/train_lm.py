@@ -78,8 +78,8 @@ def main() -> int:
     assert all(math.isfinite(l) for l in losses), "loss diverged"
     if len(losses) > warm + 2 * k:
         post = losses[warm:]
-        assert sum(post[-k:]) / k < sum(post[:k]) / k, \
-            "post-warmup loss did not improve"
+        assert (sum(post[-k:]) / k
+                < sum(post[:k]) / k), "post-warmup loss did not improve"
         print("[train_lm] OK — post-warmup loss decreased")
     else:
         bound = math.log(run.model.vocab_size) + 1.5

@@ -215,6 +215,18 @@ class ParallelConfig:
     # gradient-sync buckets for the zero-copy HDOT schedule (subdomains of
     # the parameter domain; each bucket is one multi-operand all-reduce)
     grad_buckets: int = 8
+    # bucket emission order for the explicit schedules:
+    #   'reverse_topo' — buckets cut along layer boundaries (leaf provenance
+    #                    from models/*), collectives emitted last-backward-
+    #                    first so the first reduction departs while earlier
+    #                    layers' backward still computes
+    #   'tree'         — legacy size-balanced buckets in pytree order
+    bucket_order: str = "reverse_topo"
+    # ZeRO-3: park params/opt-state as bucket-wise flat buffers sharded over
+    # dp_axes (1/|dp| per-device residency); the explicit step all-gathers
+    # buckets forward-order and reduce-scatters them reverse-topologically.
+    # Requires the explicit-schedule (DP-only mesh) step.
+    param_shard: bool = False
     scan_layers: bool = True
     remat: str = "full"                # 'none' | 'full' | 'dots'
     # gradient accumulation microbatches (1 = no accumulation)

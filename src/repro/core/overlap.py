@@ -15,12 +15,30 @@ flatten/concatenate staging copy, no post-reduce reslice, and no dtype
 round-trip (each leaf is reduced in its own dtype), unlike the two-phase
 baseline which pays two full-parameter-size copies plus an upcast per step.
 
+With layer provenance on the gradient leaves (``models/layers.py`` tags every
+ParamSpec with its forward depth), buckets are cut along layer boundaries and
+their collectives are EMITTED reverse-topologically — last-backward-first: the
+head/final-layer bucket's reduction enters the program first, so the XLA
+latency-hiding scheduler (which prioritizes collectives by program order) can
+launch it while earlier layers' backward is still computing, instead of
+serializing every reduction behind the full backward the way tree-order
+emission does.
+
+The FSDP (ZeRO-3) composition applies the same bucket decomposition to the
+PARAMETER domain: each bucket lives as a flat buffer sharded over the DP axes
+(1/|dp| per-device residency), all-gathered bucket-wise in forward order at
+the top of the step and reduce-scattered bucket-wise in reverse-topological
+order in the backward — the HDOT subdomain schedule on both halves of the
+parameter life-cycle.
+
 Also provides microbatch gradient accumulation (the sequence-of-subdomains
 view of the global batch) used by the trainer and by the dry-run.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, List, Sequence, Tuple, Union
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -31,28 +49,80 @@ AxisNames = Union[str, Sequence[str]]
 
 
 # ------------------------------------------------------------------ bucketing
-def make_buckets(tree: PyTree, num_buckets: int) -> List[List[Tuple[int, Any]]]:
-    """Greedy size-balanced grouping of tree leaves into `num_buckets` buckets.
-    Leaf ORDER is preserved inside a bucket; buckets are the HDOT subdomains of
-    the gradient domain. Returns [[(leaf_idx, leaf), ...], ...]."""
+def make_buckets(tree: PyTree, num_buckets: int,
+                 layers: Optional[PyTree] = None,
+                 order: str = "reverse_topo") -> List[List[Tuple[int, Any]]]:
+    """Group tree leaves into at most `num_buckets` buckets — the HDOT
+    subdomains of the gradient domain. Returns [[(leaf_idx, leaf), ...], ...]
+    in collective EMISSION order.
+
+    Without `layers`: greedy size-balanced grouping, leaf order preserved
+    inside a bucket (the legacy schedule; emission order is tree order).
+
+    With `layers` (a pytree of int forward depths matching `tree`, e.g.
+    ``LanguageModel.param_layers()``): leaves are grouped by depth, depth
+    groups are merged into ~size-balanced CONTIGUOUS buckets (cuts only at
+    layer boundaries), and the bucket list is ordered by `order`:
+
+      'reverse_topo'  deepest (last-backward) first — the bucket whose grads
+                      complete earliest in the backward pass is emitted first,
+                      so its collective overlaps the remaining backward.
+      'tree'          shallowest first (forward/tree order).
+    """
     leaves = jax.tree.leaves(tree)
-    sizes = [(i, int(getattr(l, "size", 1))) for i, l in enumerate(leaves)]
+    if not leaves:
+        return []
     num_buckets = max(1, min(num_buckets, len(leaves)))
-    # greedy: biggest leaf into currently-smallest bucket
-    buckets: List[List[int]] = [[] for _ in range(num_buckets)]
-    load = [0] * num_buckets
-    for i, sz in sorted(sizes, key=lambda t: -t[1]):
-        b = load.index(min(load))
-        buckets[b].append(i)
-        load[b] += sz
-    return [[(i, leaves[i]) for i in sorted(b)] for b in buckets if b]
+    if layers is None:
+        sizes = [(i, _leaf_size(l)) for i, l in enumerate(leaves)]
+        # greedy: biggest leaf into currently-smallest bucket
+        buckets: List[List[int]] = [[] for _ in range(num_buckets)]
+        load = [0] * num_buckets
+        for i, sz in sorted(sizes, key=lambda t: -t[1]):
+            b = load.index(min(load))
+            buckets[b].append(i)
+            load[b] += sz
+        return [[(i, leaves[i]) for i in sorted(b)] for b in buckets if b]
+
+    if order not in ("reverse_topo", "tree"):
+        raise ValueError(f"unknown bucket order {order!r}")
+    tags = jax.tree.leaves(layers)
+    if len(tags) != len(leaves):
+        raise ValueError(
+            f"layer-provenance tree has {len(tags)} leaves but the gradient "
+            f"tree has {len(leaves)} — tag every leaf (models/*.py)")
+    by_depth: Dict[int, List[int]] = {}
+    for i, t in enumerate(tags):
+        by_depth.setdefault(int(t), []).append(i)
+    depths = sorted(by_depth, reverse=(order == "reverse_topo"))
+    total = sum(_leaf_size(leaves[i]) for i in range(len(leaves)))
+    # contiguous partition of the depth sequence: group g goes to the bucket
+    # its cumulative-size midpoint falls in — cuts land only on layer
+    # boundaries, loads stay within one layer's size of balanced
+    buckets, cum = [[] for _ in range(num_buckets)], 0
+    for d in depths:
+        size_d = sum(_leaf_size(leaves[i]) for i in by_depth[d])
+        b = min(num_buckets - 1, (cum + size_d // 2) * num_buckets // total)
+        buckets[b].extend(sorted(by_depth[d]))
+        cum += size_d
+    return [[(i, leaves[i]) for i in b] for b in buckets if b]
+
+
+def _leaf_size(leaf: Any) -> int:
+    size = getattr(leaf, "size", None)
+    if size is None:
+        shape = getattr(leaf, "shape", ())
+        size = math.prod(shape) if shape else 1
+    return int(size)
 
 
 def grad_sync_two_phase(grads: PyTree, axes: AxisNames) -> PyTree:
     """Paper baseline: ONE monolithic reduction of the flattened gradient.
     Maximally serialized — nothing can overlap a single fused collective."""
     leaves, treedef = jax.tree.flatten(grads)
-    flat = jnp.concatenate([l.reshape(-1) for l in leaves]) if leaves else jnp.zeros((0,))
+    if not leaves:
+        return grads  # nothing to reduce: don't emit a zero-size collective
+    flat = jnp.concatenate([l.reshape(-1) for l in leaves])
     flat = lax.psum(flat, axes)
     out, off = [], 0
     for l in leaves:
@@ -61,18 +131,25 @@ def grad_sync_two_phase(grads: PyTree, axes: AxisNames) -> PyTree:
     return jax.tree.unflatten(treedef, out)
 
 
-def grad_sync_hdot(grads: PyTree, axes: AxisNames, num_buckets: int = 8) -> PyTree:
+def grad_sync_hdot(grads: PyTree, axes: AxisNames, num_buckets: int = 8,
+                   layers: Optional[PyTree] = None,
+                   order: str = "reverse_topo") -> PyTree:
     """HDOT: per-bucket reductions — independent collectives that the
     latency-hiding scheduler interleaves with compute (and with each other).
 
     Zero-copy: a bucket is reduced as ONE ``lax.psum`` over its leaf tuple
     (a single multi-operand all-reduce), so leaves are never concatenated
-    into a staging buffer, never resliced, and keep their dtypes."""
+    into a staging buffer, never resliced, and keep their dtypes.
+
+    With `layers` (leaf-wise forward depths) the buckets are cut along layer
+    boundaries and their psums emitted last-backward-first (see
+    :func:`make_buckets`), so the first reduction departs while earlier
+    layers' backward is still computing."""
     leaves, treedef = jax.tree.flatten(grads)
     if not leaves:
         return grads
     synced: dict = {}
-    for bucket in make_buckets(grads, num_buckets):
+    for bucket in make_buckets(grads, num_buckets, layers=layers, order=order):
         idxs = tuple(i for i, _ in bucket)
         reduced = lax.psum(tuple(v for _, v in bucket), axes)
         synced.update(zip(idxs, reduced))
@@ -80,9 +157,11 @@ def grad_sync_hdot(grads: PyTree, axes: AxisNames, num_buckets: int = 8) -> PyTr
 
 
 def grad_sync(grads: PyTree, axes: AxisNames, mode: str = "hdot",
-              num_buckets: int = 8) -> PyTree:
+              num_buckets: int = 8, layers: Optional[PyTree] = None,
+              order: str = "reverse_topo") -> PyTree:
     if mode == "hdot":
-        return grad_sync_hdot(grads, axes, num_buckets)
+        return grad_sync_hdot(grads, axes, num_buckets, layers=layers,
+                              order=order)
     if mode in ("none", "two_phase"):
         return grad_sync_two_phase(grads, axes)
     raise ValueError(f"unknown overlap mode {mode!r}")
@@ -93,7 +172,11 @@ def microbatch_split(batch: PyTree, steps: int) -> PyTree:
     """(B, ...) -> (steps, B/steps, ...) for scan-based accumulation."""
     def split(x):
         b = x.shape[0]
-        assert b % steps == 0, f"batch {b} not divisible by accum steps {steps}"
+        if b % steps != 0:
+            # a bare assert vanishes under `python -O` and the reshape below
+            # then fails with a shapeless size-mismatch error
+            raise ValueError(
+                f"global batch {b} is not divisible by accum steps {steps}")
         return x.reshape(steps, b // steps, *x.shape[1:])
     return jax.tree.map(split, batch)
 
@@ -120,3 +203,144 @@ def accumulate_grads(loss_and_grad: Callable[[PyTree, PyTree], Tuple[jax.Array, 
     (loss_sum, g_sum), _ = lax.scan(body, (jnp.zeros((), jnp.float32), g0), micro)
     inv = 1.0 / steps
     return loss_sum * inv, jax.tree.map(lambda g: g * inv, g_sum)
+
+
+# ----------------------------------------------------- FSDP (ZeRO-3) buckets
+@dataclass(frozen=True)
+class FsdpGroup:
+    """One flat parameter buffer: a grad-sync bucket restricted to one dtype
+    (buffers are concatenations, so leaves of different dtypes in the same
+    bucket get sibling buffers sharing the bucket's schedule slot)."""
+
+    key: str                          # buffer name in the flat state dict
+    bucket: int                       # forward-order bucket index
+    dtype: Any
+    leaf_idx: Tuple[int, ...]         # leaves packed into this buffer
+    shapes: Tuple[Tuple[int, ...], ...]
+    offsets: Tuple[int, ...]          # leaf start offsets in the buffer
+    size: int                         # unpadded element count
+    padded: int                       # size rounded up to n_shards
+
+
+@dataclass(frozen=True)
+class FsdpLayout:
+    """Bucket-wise flat-buffer layout of a parameter tree for ZeRO-3 sharding
+    over the DP axes. ``groups`` is stored in FORWARD order (bucket 0 =
+    shallowest = embedding end); the backward reduce-scatter iterates it in
+    reverse — last-backward bucket first."""
+
+    groups: Tuple[FsdpGroup, ...]
+    treedef: Any
+    n_shards: int
+    num_leaves: int
+
+    @property
+    def keys(self) -> Tuple[str, ...]:
+        return tuple(g.key for g in self.groups)
+
+    def shard_bytes(self) -> int:
+        """Per-device bytes of one parameter copy under this layout."""
+        return sum(g.padded // self.n_shards * jnp.dtype(g.dtype).itemsize
+                   for g in self.groups)
+
+
+def fsdp_layout(tree: PyTree, n_shards: int, num_buckets: int = 8,
+                layers: Optional[PyTree] = None,
+                order: str = "reverse_topo") -> FsdpLayout:
+    """Cut `tree` (params or matching abstract specs) into the per-bucket flat
+    buffers of the ZeRO-3 schedule. Buckets follow :func:`make_buckets`
+    (layer-boundary cuts when `layers` is given); each is split by dtype into
+    concatenable buffers padded up to a multiple of `n_shards`."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        raise ValueError("fsdp_layout needs a non-empty parameter tree")
+    buckets = make_buckets(tree, num_buckets, layers=layers, order=order)
+    if layers is not None and order == "reverse_topo":
+        buckets = buckets[::-1]  # store forward order; RS iterates reversed
+    groups: List[FsdpGroup] = []
+    for b, bucket in enumerate(buckets):
+        by_dtype: Dict[Any, List[int]] = {}
+        for i, leaf in bucket:
+            by_dtype.setdefault(jnp.dtype(leaf.dtype).name, []).append(i)
+        for dtype_name, idxs in sorted(by_dtype.items()):
+            shapes = tuple(tuple(leaves[i].shape) for i in idxs)
+            sizes = [_leaf_size(leaves[i]) for i in idxs]
+            offsets, off = [], 0
+            for s in sizes:
+                offsets.append(off)
+                off += s
+            padded = -(-off // n_shards) * n_shards
+            groups.append(FsdpGroup(
+                key=f"b{b:02d}_{dtype_name}", bucket=b, dtype=dtype_name,
+                leaf_idx=tuple(idxs), shapes=shapes, offsets=tuple(offsets),
+                size=off, padded=padded))
+    return FsdpLayout(groups=tuple(groups), treedef=treedef,
+                      n_shards=n_shards, num_leaves=len(leaves))
+
+
+def _pack_group(leaves: List[Any], g: FsdpGroup) -> jax.Array:
+    """Concatenate a group's leaves into its flat (padded) buffer."""
+    flat = [leaves[i].reshape(-1) for i in g.leaf_idx]
+    buf = flat[0] if len(flat) == 1 else jnp.concatenate(flat)
+    if g.padded > g.size:
+        buf = jnp.pad(buf, (0, g.padded - g.size))
+    return buf
+
+
+def _unpack_group(buf: jax.Array, g: FsdpGroup, out: List[Any]) -> None:
+    """Slice a group's full flat buffer back into its leaves (into `out`)."""
+    for i, off, shape in zip(g.leaf_idx, g.offsets, g.shapes):
+        size = math.prod(shape) if shape else 1
+        out[i] = buf[off:off + size].reshape(shape)
+
+
+def fsdp_shard_full(tree: PyTree, layout: FsdpLayout) -> Dict[str, jax.Array]:
+    """GLOBAL view: params tree -> {key: flat (padded,) buffer}. Place each
+    buffer with ``NamedSharding(mesh, P(dp_axes))`` and per-device parameter
+    residency drops to 1/n_shards."""
+    leaves = jax.tree.leaves(tree)
+    if len(leaves) != layout.num_leaves:
+        raise ValueError(f"tree has {len(leaves)} leaves, layout expects "
+                         f"{layout.num_leaves}")
+    return {g.key: _pack_group(leaves, g) for g in layout.groups}
+
+
+def fsdp_unshard_full(flat: Dict[str, jax.Array], layout: FsdpLayout) -> PyTree:
+    """GLOBAL view: {key: flat buffer} -> params tree (inverse of
+    :func:`fsdp_shard_full`; also reshapes optimizer-moment buffers, whose
+    dtype may differ from the params')."""
+    out: List[Any] = [None] * layout.num_leaves
+    for g in layout.groups:
+        _unpack_group(flat[g.key], g, out)
+    return jax.tree.unflatten(layout.treedef, out)
+
+
+def fsdp_all_gather(local: Dict[str, jax.Array], layout: FsdpLayout,
+                    axes: AxisNames) -> PyTree:
+    """Inside shard_map: bucket-wise all-gather of the parameter shards, FULL
+    params tree out. Buffers are gathered in FORWARD order (bucket 0 first):
+    the embedding-end bucket the forward pass needs first is also the first
+    collective in the program, so later buckets' gathers overlap the early
+    layers' compute."""
+    out: List[Any] = [None] * layout.num_leaves
+    for g in layout.groups:
+        full = lax.all_gather(local[g.key], axes, axis=0, tiled=True)
+        _unpack_group(full, g, out)
+    return jax.tree.unflatten(layout.treedef, out)
+
+
+def grad_sync_fsdp(grads: PyTree, layout: FsdpLayout,
+                   axes: AxisNames) -> Dict[str, jax.Array]:
+    """Inside shard_map: bucket-wise reduce-scatter of the gradients — the
+    ZeRO-3 half of the HDOT schedule. One ``lax.psum_scatter`` per flat
+    buffer, EMITTED in reverse-topological order (last bucket of the layout
+    first): the head bucket's gradients are complete earliest in the backward
+    pass, so its reduction is first in program order and departs while the
+    earlier layers' backward is still computing. Returns {key: local shard}
+    of the SUM over `axes` (divide by the shard count for the mean)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    if treedef != layout.treedef:
+        raise ValueError("gradient tree does not match the FSDP layout")
+    return {g.key: lax.psum_scatter(_pack_group(leaves, g), axes,
+                                    scatter_dimension=0, tiled=True)
+            for g in reversed(layout.groups)}

@@ -36,7 +36,10 @@ def task_reduce(partials: Sequence[jax.Array], op: str = "sum") -> jax.Array:
     combine itself exposes no serialization."""
     combine, _ = _OPS[op]
     items = list(partials)
-    assert items, "task_reduce needs at least one partial"
+    if not items:
+        # bare asserts vanish under `python -O`; this is a caller bug that
+        # must surface loudly on the reduction hot path
+        raise ValueError("task_reduce needs at least one partial")
     while len(items) > 1:
         nxt = []
         for i in range(0, len(items) - 1, 2):

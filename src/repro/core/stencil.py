@@ -240,8 +240,8 @@ def _rk3_solver(mesh, axis_name, steps: int, dt: float, mode: str):
     ay, az = axis_name if two_d else (None, None)
 
     def local(v):
-        if two_d and mode == "hdot" and v.shape[1] >= 16 and \
-                v.shape[2] >= 16 and steps > 0:
+        if (two_d and mode == "hdot" and v.shape[1] >= 16
+                and v.shape[2] >= 16 and steps > 0):
             hy = exchange_halo(v, ay, width=4, dim=1, periodic=True)
             hz = exchange_halo(v, az, width=4, dim=2, periodic=True)
 

@@ -57,9 +57,12 @@ def make_grid_mesh(*shape: int, axes: Optional[Tuple[str, ...]] = None) -> Mesh:
     in the 2-D scheme, (4, 2, 1) a 2-D topology in the 3-D scheme — so
     benchmarks can track topology gaps on equal footing."""
     if axes is None:
-        assert len(shape) in (2, 3), shape
+        if len(shape) not in (2, 3):
+            raise ValueError(f"make_grid_mesh default axes cover 2-D/3-D "
+                             f"grids; got shape {shape} — pass axes=")
         axes = GRID_AXES if len(shape) == 2 else GRID_AXES_3D
-    assert len(axes) == len(shape), (shape, axes)
+    if len(axes) != len(shape):
+        raise ValueError(f"mesh shape {shape} and axes {axes} disagree")
     return jax.make_mesh(tuple(shape), tuple(axes), **_auto_kw(len(shape)))
 
 
@@ -79,6 +82,10 @@ def mesh_axis_size(mesh: Mesh, name: str) -> int:
 
 
 def validate_production_mesh(mesh: Mesh, *, multi_pod: bool) -> None:
+    # a validator that compiles away under `python -O` validates nothing
     want = (2, 16, 16) if multi_pod else (16, 16)
-    assert tuple(mesh.devices.shape) == want, (mesh.devices.shape, want)
-    assert mesh.devices.size == (512 if multi_pod else 256)
+    if tuple(mesh.devices.shape) != want:
+        raise ValueError(f"production mesh must be {want}, "
+                         f"got {tuple(mesh.devices.shape)}")
+    if mesh.devices.size != (512 if multi_pod else 256):
+        raise ValueError(f"production mesh has {mesh.devices.size} devices")

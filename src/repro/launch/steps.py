@@ -9,7 +9,7 @@ production would run.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,12 +17,27 @@ import jax.numpy as jnp
 from repro.checkpoint.elastic import shardings_for
 from repro.config.base import ModelConfig, ParallelConfig
 from repro.config.shapes import ShapeConfig
-from repro.core.overlap import accumulate_grads
+from repro.core.overlap import (FsdpLayout, accumulate_grads, fsdp_all_gather,
+                                fsdp_layout, fsdp_shard_full, grad_sync_fsdp)
 from repro.models.model import LanguageModel, ModelOptions, build_model, input_specs
-from repro.optim import AdamWConfig, adamw_update, warmup_cosine
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
 from repro.sharding.rules import ShardingContext, use_sharding
 
 PyTree = Any
+
+
+def explicit_sync_axes(parallel: ParallelConfig, mesh) -> Tuple[Tuple[str, ...], bool]:
+    """(sync_axes, explicit): the DP axes present on `mesh`, and whether the
+    explicit shard_map grad-sync schedules are faithful there. The explicit
+    schedules treat params as replicated (or DP-sharded) inside shard_map,
+    which is only sound when every non-DP mesh axis is trivial — a
+    non-trivial TP axis must keep the GSPMD path."""
+    if mesh is None:
+        return (), False
+    sync_axes = tuple(a for a in parallel.dp_axes if a in mesh.axis_names)
+    explicit = bool(sync_axes) and all(
+        mesh.shape[a] == 1 for a in mesh.axis_names if a not in sync_axes)
+    return sync_axes, explicit
 
 
 @dataclasses.dataclass
@@ -103,6 +118,121 @@ def make_train_step(model: LanguageModel, parallel: ParallelConfig,
                                                 opt_cfg, lr,
                                                 chunk_leading=chunk_leading)
         return params, opt_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+
+    return step_fn
+
+
+# ------------------------------------------------------------ train (ZeRO-3)
+def _require_explicit_mesh(parallel: ParallelConfig, mesh) -> Tuple[str, ...]:
+    """sync_axes, or a loud error when the mesh cannot host the explicit
+    ZeRO-3 step (a non-trivial TP axis would silently replicate under the
+    flat-shard shard_map). Single source for the param_shard precondition."""
+    sync_axes, explicit = explicit_sync_axes(parallel, mesh)
+    if not explicit:
+        raise ValueError(
+            "param_shard=True needs the explicit-schedule step: a mesh whose "
+            f"non-DP axes are all trivial (got mesh axes "
+            f"{dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else None}, "
+            f"dp_axes {parallel.dp_axes})")
+    return sync_axes
+
+
+def fsdp_layout_for(model: LanguageModel, parallel: ParallelConfig,
+                    mesh) -> Tuple[FsdpLayout, Tuple[str, ...]]:
+    """The bucket-wise flat-buffer layout of `model`'s params for ZeRO-3
+    sharding over the mesh's DP axes (layer-boundary buckets when
+    ``parallel.bucket_order == 'reverse_topo'``)."""
+    sync_axes = _require_explicit_mesh(parallel, mesh)
+    n_shards = 1
+    for a in sync_axes:
+        n_shards *= mesh.shape[a]
+    layers = (model.param_layers()
+              if parallel.bucket_order == "reverse_topo" else None)
+    layout = fsdp_layout(model.abstract_params(), n_shards,
+                         parallel.grad_buckets, layers=layers,
+                         order=parallel.bucket_order)
+    return layout, sync_axes
+
+
+def fsdp_init_state(model: LanguageModel, parallel: ParallelConfig, mesh,
+                    rng) -> Tuple[Dict[str, jax.Array], PyTree, FsdpLayout]:
+    """Materialize the ZeRO-3 trainer state: params and AdamW moments as
+    bucket-wise flat buffers placed with ``P(dp_axes)`` shardings —
+    per-device parameter/opt residency is 1/n_shards of the replicated
+    step's. Returns (params_flat, opt_state, layout).
+
+    Init itself materializes the full tree once before the per-buffer
+    device_put drops residency, so the STEADY-STATE guarantee starts after
+    init — sharded per-bucket init is a ROADMAP item for model sizes whose
+    full tree cannot visit one host."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    layout, sync_axes = fsdp_layout_for(model, parallel, mesh)
+    sharding = NamedSharding(mesh, P(sync_axes))
+    params = model.init(rng)
+    flat = {k: jax.device_put(v, sharding)
+            for k, v in fsdp_shard_full(params, layout).items()}
+    opt = adamw_init(flat)
+    opt = {"m": {k: jax.device_put(v, sharding) for k, v in opt["m"].items()},
+           "v": {k: jax.device_put(v, sharding) for k, v in opt["v"].items()},
+           "step": opt["step"]}
+    return flat, opt, layout
+
+
+def make_fsdp_train_step(model: LanguageModel, parallel: ParallelConfig, mesh,
+                         opt_cfg: Optional[AdamWConfig] = None,
+                         warmup_steps: int = 100, total_steps: int = 10_000,
+                         layout: Optional[FsdpLayout] = None) -> Callable:
+    """(params_flat, opt_state, batch) -> (params_flat, opt_state, metrics):
+    the FSDP (ZeRO-3) composition of the explicit HDOT grad-sync schedule.
+
+    Inside shard_map over the DP axes: bucket-wise all-gather of the flat
+    parameter shards in FORWARD order, loss/backward on the gathered params,
+    then a bucket-wise reduce-scatter EMITTED reverse-topologically (the
+    last-backward bucket's collective first, free to depart while earlier
+    layers' backward computes). The AdamW update then runs OUTSIDE shard_map
+    directly on the flat shards — elementwise math GSPMD keeps partitioned,
+    so optimizer state never materializes unsharded."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    accum = parallel.accum_steps
+    if layout is None:
+        layout, sync_axes = fsdp_layout_for(model, parallel, mesh)
+    else:
+        sync_axes = _require_explicit_mesh(parallel, mesh)
+    n_shards = layout.n_shards
+
+    def loss_and_grad(params, batch):
+        return jax.value_and_grad(model.train_loss)(params, batch)
+
+    def local(pflat, b):
+        from repro.sharding.rules import no_sharding
+
+        # manual region: logical sharding constraints must be inert
+        with no_sharding():
+            params = fsdp_all_gather(pflat, layout, sync_axes)
+            loss, g = accumulate_grads(loss_and_grad, params, b, accum)
+            gflat = grad_sync_fsdp(g, layout, sync_axes)
+        # psum_scatter of per-shard mean-grads -> global mean over all shards
+        gflat = {k: v / n_shards for k, v in gflat.items()}
+        return jax.lax.pmean(loss, sync_axes), gflat
+
+    def grads_fn(pflat, batch):
+        from jax.sharding import PartitionSpec as P
+
+        flat_specs = {k: P(sync_axes) for k in layout.keys}
+        batch_specs = jax.tree.map(
+            lambda x: P(sync_axes, *([None] * (x.ndim - 1))), batch)
+        return jax.shard_map(
+            local, mesh=mesh, in_specs=(flat_specs, batch_specs),
+            out_specs=(P(), flat_specs), check_vma=False)(pflat, batch)
+
+    def step_fn(pflat, opt_state, batch):
+        loss, gflat = grads_fn(pflat, batch)
+        lr = warmup_cosine(opt_state["step"], opt_cfg.lr, warmup_steps,
+                           total_steps)
+        pflat, opt_state, gnorm = adamw_update(gflat, opt_state, pflat,
+                                               opt_cfg, lr)
+        return pflat, opt_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
 
     return step_fn
 

@@ -27,6 +27,14 @@ class ParamSpec:
     dtype: Any = jnp.bfloat16
     init: str = "normal"                     # normal | zeros | ones
     scale: Optional[float] = None            # None -> 1/sqrt(fan_in)
+    # Layer provenance: forward depth of the (sub)module owning this param.
+    # Higher depth = closer to the loss = its gradient is ready EARLIER in the
+    # backward pass. core.overlap uses it to cut grad-sync buckets along layer
+    # boundaries and emit their collectives last-backward-first. A scanned
+    # (stacked) layer tree is one depth: lax.scan's backward materializes the
+    # whole stacked gradient at once, so there is no per-layer early release
+    # to order within it.
+    layer: Optional[int] = None
 
     def __post_init__(self):
         assert len(self.shape) == len(self.axes), (self.shape, self.axes)
@@ -80,6 +88,22 @@ def abstract_from_specs(specs: PyTree) -> PyTree:
 
 def axes_from_specs(specs: PyTree) -> PyTree:
     return jax.tree.map(lambda s: s.axes, specs,
+                        is_leaf=lambda s: isinstance(s, ParamSpec))
+
+
+def layers_from_specs(specs: PyTree) -> PyTree:
+    """Layer-provenance tree (same structure as the params): each leaf's
+    forward depth, untagged specs defaulting to depth 0 (the input end, whose
+    gradients complete last)."""
+    return jax.tree.map(lambda s: 0 if s.layer is None else s.layer, specs,
+                        is_leaf=lambda s: isinstance(s, ParamSpec))
+
+
+def tag_layer(specs: PyTree, depth: int) -> PyTree:
+    """Stamp `depth` as the layer provenance of every spec in the subtree."""
+    import dataclasses
+
+    return jax.tree.map(lambda s: dataclasses.replace(s, layer=depth), specs,
                         is_leaf=lambda s: isinstance(s, ParamSpec))
 
 

@@ -25,7 +25,9 @@ from repro.models.layers import (
     axes_from_specs,
     init_from_specs,
     layer_norm,
+    layers_from_specs,
     sinusoidal_embedding,
+    tag_layer,
 )
 from repro.sharding.rules import with_logical
 
@@ -53,29 +55,42 @@ class LanguageModel:
 
     # ------------------------------------------------------------------ specs
     def param_specs(self) -> PyTree:
+        """Every leaf carries layer provenance (``ParamSpec.layer``): forward
+        depth 0 for the embedding/frontends, ``1..N`` through the stacks, and
+        the deepest tag on the head — so the grad-sync scheduler knows which
+        leaves' gradients complete first in the backward pass."""
         cfg, dt = self.cfg, self.opt.dtype
+        # encoder backward runs AFTER the decoder stack's (its grads gather
+        # cross-attention contributions from every decoder layer), so the
+        # encoder occupies depths 1..enc_layers below the main stack
+        enc_depth = cfg.encdec.enc_layers + 1 if cfg.family == "encdec" else 0
+        stack0 = enc_depth + 1
+        head_depth = stack0 + cfg.num_layers
         specs: Dict[str, Any] = {
             "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
-                               dt, scale=cfg.d_model ** -0.5),
-            "layers": tfm.stack_specs(cfg, self.opt.scan_layers, dt),
+                               dt, scale=cfg.d_model ** -0.5, layer=0),
+            "layers": tfm.stack_specs(cfg, self.opt.scan_layers, dt,
+                                      depth0=stack0),
         }
-        specs.update(tfm._norm_specs(cfg, "final_norm"))
+        specs.update(tag_layer(tfm._norm_specs(cfg, "final_norm"), head_depth))
         if not cfg.tie_embeddings:
             specs["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
-                                         ("embed", "vocab"), dt)
+                                         ("embed", "vocab"), dt,
+                                         layer=head_depth)
         if cfg.family == "encdec":
             enc_cfg = dataclasses.replace(cfg, num_layers=cfg.encdec.enc_layers)
             self._enc_cfg = enc_cfg
-            specs["encoder"] = [tfm.layer_specs(enc_cfg, "attn", dt)
-                                for _ in range(cfg.encdec.enc_layers)]
-            specs.update(tfm._norm_specs(cfg, "enc_norm"))
+            specs["encoder"] = [tag_layer(tfm.layer_specs(enc_cfg, "attn", dt),
+                                          1 + i)
+                                for i in range(cfg.encdec.enc_layers)]
+            specs.update(tag_layer(tfm._norm_specs(cfg, "enc_norm"), enc_depth))
         if cfg.family == "vlm":
             # stub projection for precomputed patch embeddings (identity-sized)
             specs["vision_proj"] = ParamSpec((cfg.d_model, cfg.d_model),
-                                             ("embed", None), dt)
+                                             ("embed", None), dt, layer=0)
         if cfg.family == "encdec":
             specs["audio_proj"] = ParamSpec((cfg.d_model, cfg.d_model),
-                                            ("embed", None), dt)
+                                            ("embed", None), dt, layer=0)
         return specs
 
     def init(self, rng: jax.Array) -> PyTree:
@@ -86,6 +101,12 @@ class LanguageModel:
 
     def param_axes(self) -> PyTree:
         return axes_from_specs(self.param_specs())
+
+    def param_layers(self) -> PyTree:
+        """Layer-provenance tree matching :meth:`init`'s params: per-leaf
+        forward depth, consumed by the reverse-topological grad-sync bucket
+        schedule (core.overlap)."""
+        return layers_from_specs(self.param_specs())
 
     # ------------------------------------------------------------- embeddings
     def _embed(self, params, tokens: jax.Array) -> jax.Array:

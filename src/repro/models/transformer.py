@@ -191,18 +191,29 @@ def _rglru_prefill(p, h, cfg):
 
 
 # ----------------------------------------------------------------- the stacks
-def stack_specs(cfg: ModelConfig, scan: bool, dtype=jnp.bfloat16) -> Any:
+def stack_specs(cfg: ModelConfig, scan: bool, dtype=jnp.bfloat16,
+                depth0: int = 1) -> Any:
+    """Specs for the main stack, layer-provenance tagged: unrolled layer i is
+    forward depth ``depth0 + i``; a scanned stack is ONE stacked subtree at
+    ``depth0`` (its gradient materializes whole out of the scan backward, so
+    there is no finer-grained release to order)."""
+    import dataclasses
+
+    from repro.models.layers import tag_layer
+
     kinds = block_kinds(cfg)
     if scan and uniform_stack(cfg):
         one = layer_specs(cfg, kinds[0], dtype)
 
         def add_dim(spec: ParamSpec) -> ParamSpec:
-            return ParamSpec((cfg.num_layers,) + spec.shape,
-                             ("layers",) + spec.axes, spec.dtype, spec.init, spec.scale)
+            return dataclasses.replace(
+                spec, shape=(cfg.num_layers,) + spec.shape,
+                axes=("layers",) + spec.axes)
 
-        return jax.tree.map(add_dim, one,
-                            is_leaf=lambda s: isinstance(s, ParamSpec))
-    return [layer_specs(cfg, k, dtype) for k in kinds]
+        return tag_layer(jax.tree.map(
+            add_dim, one, is_leaf=lambda s: isinstance(s, ParamSpec)), depth0)
+    return [tag_layer(layer_specs(cfg, k, dtype), depth0 + i)
+            for i, k in enumerate(kinds)]
 
 
 def stack_apply(params, x, cfg: ModelConfig, positions, mode: str,

@@ -74,8 +74,8 @@ class BatchServer:
                 t = int(token[i, 0])
                 if not done[i]:
                     outputs[i].append(t)
-                    if (r.eos_id is not None and t == r.eos_id) or \
-                            len(outputs[i]) >= r.max_new_tokens:
+                    if ((r.eos_id is not None and t == r.eos_id)
+                            or len(outputs[i]) >= r.max_new_tokens):
                         done[i] = True
             if done.all():
                 break

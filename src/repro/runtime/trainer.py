@@ -25,7 +25,7 @@ import numpy as np
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.checkpoint.elastic import shardings_for
 from repro.config.base import RunConfig
-from repro.core.overlap import accumulate_grads, grad_sync
+from repro.core.overlap import accumulate_grads, fsdp_unshard_full, grad_sync
 from repro.data.pipeline import SyntheticLMDataset
 from repro.models.model import ModelOptions, build_model
 from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
@@ -57,6 +57,9 @@ class Trainer:
         self.params: Optional[PyTree] = None
         self.opt_state: Optional[PyTree] = None
         self._jit_step = None
+        # ZeRO-3: params/opt live as bucket-wise flat buffers sharded over
+        # the DP axes (see core.overlap.FsdpLayout); None = replicated state
+        self._fsdp_layout = None
         self.metrics_log: list = []
 
     # ------------------------------------------------------------------ setup
@@ -68,14 +71,29 @@ class Trainer:
         return use_sharding(self.mesh)
 
     def init_state(self, seed: Optional[int] = None) -> None:
+        rng = jax.random.PRNGKey(self.run.train.seed if seed is None else seed)
         with self._ctx():
-            params = self.model.init(
-                jax.random.PRNGKey(self.run.train.seed if seed is None else seed))
+            if self.run.parallel.param_shard:
+                from repro.launch.steps import fsdp_init_state
+
+                self.params, self.opt_state, self._fsdp_layout = (
+                    fsdp_init_state(self.model, self.run.parallel, self.mesh,
+                                    rng))
+                return
+            params = self.model.init(rng)
             if self.mesh is not None:
                 sh = shardings_for(params, self.model.param_axes(), self.mesh)
                 params = jax.tree.map(jax.device_put, params, sh)
             self.params = params
             self.opt_state = adamw_init(params)
+
+    def full_params(self) -> PyTree:
+        """The parameter tree, reassembled from the ZeRO-3 flat shards when
+        param_shard is on (tests/oracles; the hot path never gathers
+        outside the step)."""
+        if self._fsdp_layout is None:
+            return self.params
+        return fsdp_unshard_full(self.params, self._fsdp_layout)
 
     def _build_step(self) -> Callable:
         run = self.run
@@ -84,15 +102,25 @@ class Trainer:
         accum = run.parallel.accum_steps
         mesh = self.mesh
         # mesh axes that carry data parallelism: explicit HDOT grad-sync runs
-        # over exactly these (absent axes contribute no replication)
-        sync_axes = tuple(a for a in run.parallel.dp_axes
-                          if mesh is not None and a in mesh.axis_names)
-        # The explicit schedule treats params as replicated inside shard_map,
-        # which is only faithful on DP-only meshes: any non-trivial extra axis
-        # (TP over 'model') must keep the GSPMD path. FSDP param gathering is
-        # the remaining composition gap — see ROADMAP "Open items".
-        explicit_sync = sync_axes and all(
-            mesh.shape[a] == 1 for a in mesh.axis_names if a not in sync_axes)
+        # over exactly these. The explicit schedule treats params as
+        # replicated (or ZeRO-3 flat-sharded) inside shard_map, which is only
+        # faithful on DP-only meshes: any non-trivial extra axis (TP over
+        # 'model') must keep the GSPMD path.
+        from repro.launch.steps import explicit_sync_axes, make_fsdp_train_step
+
+        sync_axes, explicit_sync = explicit_sync_axes(run.parallel, mesh)
+
+        if run.parallel.param_shard:
+            # ZeRO-3 composition: bucket-wise all-gather / reduce-scatter
+            # around the backward, optimizer on the flat shards (GSPMD keeps
+            # the elementwise update partitioned). fsdp_init_state already
+            # validated the mesh; layout is shared with the state buffers.
+            step_fn = make_fsdp_train_step(
+                model, run.parallel, mesh, opt_cfg,
+                warmup_steps=run.train.warmup_steps,
+                total_steps=run.train.total_steps,
+                layout=self._fsdp_layout)
+            return jax.jit(step_fn, donate_argnums=(0, 1))
 
         def loss_and_grad(params, batch):
             return jax.value_and_grad(model.train_loss)(params, batch)
@@ -110,6 +138,10 @@ class Trainer:
             n_shards = 1
             for a in sync_axes:
                 n_shards *= mesh.shape[a]
+            # layer provenance: cut buckets on layer boundaries and emit
+            # them last-backward-first (ParallelConfig.bucket_order)
+            layers = (model.param_layers()
+                      if run.parallel.bucket_order == "reverse_topo" else None)
 
             def local(p, b):
                 from repro.sharding.rules import no_sharding
@@ -118,7 +150,8 @@ class Trainer:
                 with no_sharding():
                     loss, g = accumulate_grads(loss_and_grad, p, b, accum)
                 g = grad_sync(g, sync_axes, mode=run.parallel.overlap,
-                              num_buckets=run.parallel.grad_buckets)
+                              num_buckets=run.parallel.grad_buckets,
+                              layers=layers, order=run.parallel.bucket_order)
                 # psum of per-shard mean-grads -> global mean over all shards
                 g = jax.tree.map(lambda x: x / n_shards, g)
                 return jax.lax.pmean(loss, sync_axes), g
@@ -152,7 +185,21 @@ class Trainer:
             self.init_state()
         target = {"params": self.params, "opt": self.opt_state}
         _, tree, extra = restore_checkpoint(d, target)
-        if self.mesh is not None:
+        if self.mesh is not None and self._fsdp_layout is not None:
+            # ZeRO-3 state: params AND optimizer moments go back to their
+            # P(dp_axes) shards (mirrors fsdp_init_state — otherwise the
+            # restored moments sit replicated and 1/|dp| residency is lost)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.launch.steps import explicit_sync_axes
+
+            sync_axes, _ = explicit_sync_axes(self.run.parallel, self.mesh)
+            sharding = NamedSharding(self.mesh, P(sync_axes))
+            tree["params"] = {k: jax.device_put(v, sharding)
+                              for k, v in tree["params"].items()}
+            for mom in ("m", "v"):
+                tree["opt"][mom] = {k: jax.device_put(v, sharding)
+                                    for k, v in tree["opt"][mom].items()}
+        elif self.mesh is not None:
             sh = {
                 "params": shardings_for(self.params, self.model.param_axes(), self.mesh),
                 "opt": None,

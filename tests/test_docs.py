@@ -80,11 +80,25 @@ def test_render_table_shape():
         {"devices": 4, "mesh_shape": "2x2", "metric": "sweeps_per_s",
          "two_phase": 10.0, "hdot": 8.0, "hdot_two_phase_ratio": 0.8},
         {"devices": 2, "metric": "sweeps_per_s",
-         "two_phase": 5.0, "hdot": 5.5, "hdot_two_phase_ratio": 1.1},
+         "two_phase": 5.0, "hdot": 5.5, "hdot_two_phase_ratio": 1.1,
+         "fsdp": 4.5, "fsdp_two_phase_ratio": 0.9},
     ]}, "broken": {"error": "boom"}}
     table = docs_sync.render_table(quick)
     lines = table.splitlines()
     assert lines[0].startswith("| suite ")
-    assert "| demo | 4 | 2x2 | sweeps_per_s | 10.00 | 8.00 | 0.80x |" in lines
-    assert "| demo | 2 | - | sweeps_per_s | 5.00 | 5.50 | 1.10x |" in lines
+    assert ("| demo | 4 | 2x2 | sweeps_per_s | 10.00 | 8.00 | 0.80x | - |"
+            in lines)
+    assert ("| demo | 2 | - | sweeps_per_s | 5.00 | 5.50 | 1.10x | 0.90x |"
+            in lines)
     assert any("ERROR" in ln for ln in lines)
+
+
+def test_bench_quick_tracks_fsdp_row():
+    """lm_step's committed trajectory must carry the ZeRO-3 composition row
+    (PR 5 onward) so the fsdp/two_phase headline is gated by ci_gate."""
+    from benchmarks import docs_sync
+
+    quick = docs_sync.load_quick()
+    rows = [r for r in quick["lm_step"]["rows"] if "fsdp_two_phase_ratio" in r]
+    assert rows, "lm_step lost its fsdp row"
+    assert "fsdp_two_phase_ratio" in quick["lm_step"]

@@ -1,0 +1,273 @@
+"""Layer provenance, reverse-topological bucketing and the FSDP (ZeRO-3)
+composition of the explicit grad-sync schedule (core.overlap + models/* +
+launch/steps). Multi-device behaviour (real reduce-scatters, channel-order,
+memory residency) lives in tests/test_system.py; everything here runs on the
+single CPU device."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.overlap import (fsdp_all_gather, fsdp_layout, fsdp_shard_full,
+                                fsdp_unshard_full, grad_sync, grad_sync_fsdp,
+                                make_buckets)
+
+ARCHS = ["qwen3-8b", "mixtral-8x7b", "mamba2-780m", "recurrentgemma-2b",
+         "whisper-base", "llava-next-34b"]
+
+
+def _model(arch_id: str, scan: bool = True):
+    from repro.config.registry import get_arch
+    from repro.models.model import ModelOptions, build_model
+
+    return build_model(get_arch(arch_id).reduced(),
+                       ModelOptions(attn_impl="dense", scan_layers=scan))
+
+
+# ------------------------------------------------------------ provenance
+@pytest.mark.parametrize("arch_id", ARCHS)
+@pytest.mark.parametrize("scan", [True, False])
+def test_every_param_leaf_carries_a_layer_tag(arch_id, scan):
+    """param_layers() mirrors the param tree exactly and every leaf is an int
+    forward depth: 0 at the embedding/frontends, the maximum on the head —
+    the total order the reverse-topological bucket schedule relies on."""
+    model = _model(arch_id, scan)
+    params = model.abstract_params()
+    layers = model.param_layers()
+    assert jax.tree.structure(params) == jax.tree.structure(layers)
+    tags = jax.tree.leaves(layers)
+    assert tags and all(isinstance(t, int) and t >= 0 for t in tags)
+    assert min(tags) == 0 and max(tags) >= 1
+
+
+def test_layer_tags_order_embed_stack_head():
+    model = _model("qwen3-8b", scan=False)
+    layers = model.param_layers()
+    cfg = model.cfg
+    assert layers["embed"] == 0
+    depths = sorted({t for t in jax.tree.leaves(layers["layers"])})
+    assert depths == list(range(1, cfg.num_layers + 1))  # unrolled: 1..N
+    assert layers["final_norm"] == cfg.num_layers + 1
+    head = layers.get("lm_head", layers["final_norm"])
+    assert head == cfg.num_layers + 1
+
+
+def test_layer_tags_scanned_stack_is_one_depth():
+    """lax.scan's backward releases the whole stacked gradient at once, so
+    the scanned stack is ONE subdomain of the layer dimension."""
+    model = _model("qwen3-8b", scan=True)
+    layers = model.param_layers()
+    assert set(jax.tree.leaves(layers["layers"])) == {1}
+
+
+# ------------------------------------------------- reverse-topo bucketing
+def _layered_tree(sizes_by_depth):
+    tree, layers = {}, {}
+    for d, sizes in sizes_by_depth.items():
+        for j, s in enumerate(sizes):
+            tree[f"d{d}_{j}"] = jnp.zeros((s,))
+            layers[f"d{d}_{j}"] = d
+    return tree, layers
+
+
+def test_make_buckets_layered_partition_and_boundaries():
+    """Layer-provenance buckets: every leaf exactly once, cuts ONLY at layer
+    boundaries (no layer is split across buckets), emission order deepest
+    first."""
+    tree, layers = _layered_tree({0: [50, 30], 1: [40], 2: [40, 5],
+                                  3: [60], 4: [20, 20]})
+    buckets = make_buckets(tree, 3, layers=layers, order="reverse_topo")
+    idx2tag = dict(enumerate(jax.tree.leaves(layers)))
+    seen = sorted(i for b in buckets for i, _ in b)
+    assert seen == list(range(len(idx2tag)))
+    tag_sets = [{idx2tag[i] for i, _ in b} for b in buckets]
+    for a in range(len(tag_sets)):
+        for b in range(a + 1, len(tag_sets)):
+            assert not (tag_sets[a] & tag_sets[b]), "layer split across buckets"
+    maxes = [max(s) for s in tag_sets]
+    assert maxes == sorted(maxes, reverse=True), "not last-backward-first"
+    # 'tree' order is the same cut, forward
+    fwd = make_buckets(tree, 3, layers=layers, order="tree")
+    fmaxes = [max({idx2tag[i] for i, _ in b}) for b in fwd]
+    assert fmaxes == sorted(fmaxes)
+
+
+def test_make_buckets_layered_caps_at_distinct_depths():
+    tree, layers = _layered_tree({0: [10], 1: [10]})
+    assert len(make_buckets(tree, 8, layers=layers)) == 2
+
+
+def test_make_buckets_layered_mismatched_provenance_raises():
+    tree, layers = _layered_tree({0: [10], 1: [10]})
+    layers.pop("d1_0")
+    with pytest.raises(ValueError, match="provenance"):
+        make_buckets(tree, 2, layers=layers)
+    with pytest.raises(ValueError, match="order"):
+        make_buckets(tree, 2, layers={k: 0 for k in tree}, order="sideways")
+
+
+def test_make_buckets_legacy_unchanged_without_layers():
+    tree = {f"w{i}": jnp.zeros((s,)) for i, s in enumerate([5, 100, 7, 60])}
+    buckets = make_buckets(tree, 2)
+    seen = sorted(i for b in buckets for i, _ in b)
+    assert seen == [0, 1, 2, 3]
+    for b in buckets:
+        idxs = [i for i, _ in b]
+        assert idxs == sorted(idxs)
+
+
+# ------------------------------------------------------- zero-leaf guards
+def test_grad_sync_empty_tree_emits_no_collective(single_mesh):
+    """Zero gradient leaves: both schedules return the tree untouched and the
+    lowering contains NO collective (the old two_phase psum'd an empty
+    zeros((0,)) — a pointless wire op)."""
+    from jax.sharding import PartitionSpec as P
+
+    for mode in ("two_phase", "hdot"):
+        f = jax.jit(jax.shard_map(
+            lambda g, mode=mode: grad_sync(g, "data", mode=mode),
+            mesh=single_mesh, in_specs=(P(),), out_specs=P()))
+        assert f({}) == {}
+        txt = f.lower({}).as_text()
+        assert "all-reduce" not in txt and "all_reduce" not in txt
+
+
+# --------------------------------------------------------- ZeRO-3 layout
+def _mixed_params():
+    k = jax.random.PRNGKey(0)
+    tree = {
+        "emb": jax.random.normal(k, (7, 6), jnp.float32),          # 42
+        "w1": jax.random.normal(jax.random.fold_in(k, 1),
+                                (5, 5)).astype(jnp.bfloat16),       # 25
+        "n1": jnp.ones((3,), jnp.float32),
+        "head": jax.random.normal(jax.random.fold_in(k, 2), (11,)),
+    }
+    layers = {"emb": 0, "w1": 1, "n1": 1, "head": 2}
+    return tree, layers
+
+
+@pytest.mark.parametrize("n_shards", [1, 3, 4])
+def test_fsdp_layout_roundtrip_with_padding(n_shards):
+    tree, layers = _mixed_params()
+    layout = fsdp_layout(tree, n_shards, 3, layers=layers)
+    # forward-order buckets, per-dtype buffers, padding to n_shards
+    assert [g.bucket for g in layout.groups] == sorted(
+        g.bucket for g in layout.groups)
+    for g in layout.groups:
+        assert g.padded % n_shards == 0 and g.padded - g.size < n_shards
+    flat = fsdp_shard_full(tree, layout)
+    assert set(flat) == set(layout.keys)
+    back = fsdp_unshard_full(flat, layout)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_fsdp_gather_scatter_roundtrip_single_device(single_mesh):
+    """On an axis of size 1 the ZeRO-3 schedule is the identity: gather(shard)
+    == params and the scattered grads reassemble to the plain sync."""
+    from jax.sharding import PartitionSpec as P
+
+    tree, layers = _mixed_params()
+    layout = fsdp_layout(tree, 1, 3, layers=layers)
+    flat = fsdp_shard_full(tree, layout)
+
+    def local(pf):
+        p = fsdp_all_gather(pf, layout, "data")
+        gf = grad_sync_fsdp(p, layout, "data")   # "grads" := params here
+        return p, gf
+
+    p, gf = jax.jit(jax.shard_map(
+        local, mesh=single_mesh, in_specs=(P(),), out_specs=P(),
+        check_vma=False))(flat)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    back = fsdp_unshard_full(gf, layout)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_grad_sync_fsdp_rejects_foreign_tree():
+    tree, layers = _mixed_params()
+    layout = fsdp_layout(tree, 1, 3, layers=layers)
+    with pytest.raises(ValueError, match="layout"):
+        grad_sync_fsdp({"other": jnp.zeros((3,))}, layout, "data")
+
+
+# ------------------------------------------------- trainer composition
+def test_fsdp_trainer_step_matches_replicated_single_device(tmp_path):
+    """param_shard=True on a 1-device DP mesh: same losses and params as the
+    replicated explicit step. Tolerances are 1-ulp tight, not exact: the
+    grad-norm sums per-buffer partials in flat-dict order vs the replicated
+    step's tree order, so the clip scale can differ in the last f32 bit
+    (the multi-device oracle is the subprocess test in test_system.py)."""
+    from repro.config.base import ParallelConfig, RunConfig, TrainConfig
+    from repro.config.registry import get_arch
+    from repro.launch.mesh import make_mesh
+    from repro.runtime.trainer import Trainer
+
+    cfg = get_arch("qwen3-8b").reduced()
+    train = TrainConfig(global_batch=2, seq_len=16, warmup_steps=2,
+                        total_steps=8, checkpoint_every=10**6,
+                        checkpoint_dir=str(tmp_path))
+    mesh = make_mesh((1,), ("data",))
+    outs = {}
+    for name, par in {
+        "fsdp": ParallelConfig(param_shard=True, remat="none"),
+        "repl": ParallelConfig(param_shard=False, remat="none"),
+    }.items():
+        t = Trainer(RunConfig(cfg, par, train), mesh=mesh)
+        t.train(2)
+        outs[name] = (t.full_params(), [m["loss"] for m in t.metrics_log])
+    np.testing.assert_allclose(outs["fsdp"][1], outs["repl"][1], rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(outs["fsdp"][0]),
+                    jax.tree.leaves(outs["repl"][0])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_fsdp_checkpoint_restore_roundtrip(tmp_path):
+    """param_shard state checkpoints and restores: the restarted trainer
+    resumes from the saved step with identical flat buffers, re-placed on
+    their DP shardings (the restore path mirrors fsdp_init_state)."""
+    from repro.config.base import ParallelConfig, RunConfig, TrainConfig
+    from repro.config.registry import get_arch
+    from repro.launch.mesh import make_mesh
+    from repro.runtime.trainer import Trainer
+
+    cfg = get_arch("qwen3-8b").reduced()
+    train = TrainConfig(global_batch=2, seq_len=16, warmup_steps=2,
+                        total_steps=8, checkpoint_every=2,
+                        checkpoint_dir=str(tmp_path))
+    run = RunConfig(cfg, ParallelConfig(param_shard=True, remat="none"), train)
+    mesh = make_mesh((1,), ("data",))
+    t1 = Trainer(run, mesh=mesh)
+    t1.train(2)   # saves at step 2
+    t2 = Trainer(run, mesh=mesh)
+    assert t2.restore_if_available() and t2.step == 2
+    for k in t1.params:
+        np.testing.assert_array_equal(
+            np.asarray(t1.params[k], np.float32),
+            np.asarray(t2.params[k], np.float32))
+        assert t2.params[k].sharding == t1.params[k].sharding
+        assert (t2.opt_state["m"][k].sharding
+                == t1.opt_state["m"][k].sharding)
+    t2.train(1)   # the restored state steps without recompiling surprises
+    assert t2.step == 3
+
+
+def test_param_shard_needs_explicit_mesh():
+    """A non-trivial TP axis cannot host the explicit ZeRO-3 step — the
+    config error must be loud, not a silent wrong-layout run."""
+    from repro.config.base import ParallelConfig
+    from repro.launch.steps import fsdp_layout_for
+
+    model = _model("qwen3-8b")
+    with pytest.raises(ValueError, match="param_shard"):
+        fsdp_layout_for(model, ParallelConfig(param_shard=True), mesh=None)

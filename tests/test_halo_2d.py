@@ -32,8 +32,8 @@ def _star_fn(width: int):
         n0, n1 = p.shape[0] - 2 * width, p.shape[1] - 2 * width
         acc = 0.0
         for d in range(-width, width + 1):
-            acc = acc + p[width + d:width + d + n0, width:width + n1] \
-                + p[width:width + n0, width + d:width + d + n1]
+            acc = (acc + p[width + d:width + d + n0, width:width + n1]
+                   + p[width:width + n0, width + d:width + d + n1])
         return acc / (2 * (2 * width + 1))
     return fn
 

@@ -30,8 +30,8 @@ def _avg3(padded: jax.Array) -> jax.Array:
 
 def _d2w2(padded: jax.Array) -> jax.Array:
     """width-2 second difference along dim 0 (5-point)."""
-    return padded[:-4] - 0.5 * padded[1:-3] + padded[2:-2] \
-        - 0.5 * padded[3:-1] + padded[4:]
+    return (padded[:-4] - 0.5 * padded[1:-3] + padded[2:-2]
+            - 0.5 * padded[3:-1] + padded[4:])
 
 
 def _shmap(fn, mesh):

@@ -88,7 +88,9 @@ def test_microbatch_split_roundtrip():
 
 
 def test_microbatch_split_requires_divisibility():
-    with pytest.raises(AssertionError):
+    """A real ValueError naming the sizes — not a bare assert that vanishes
+    under `python -O` into a shapeless reshape error."""
+    with pytest.raises(ValueError, match="batch 6.*accum steps 4"):
         microbatch_split({"x": jnp.zeros((6, 2))}, 4)
 
 

@@ -466,6 +466,175 @@ def test_solver_ppermute_counts_nd():
 
 
 @pytest.mark.slow
+def test_fsdp_trainer_4dev_matches_replicated_and_two_phase():
+    """The ZeRO-3 oracle: param_shard=True on a real 4-way DP mesh produces
+    the SAME losses, params and optimizer moments as the replicated explicit
+    hdot step and the two-phase baseline (the same sums, reduce-scattered
+    instead of all-reduced; tolerances only absorb f32 summation-order
+    freedom in the grad-norm partials), while per-device parameter and
+    optimizer residency is EXACTLY 1/4 of the padded flat state — asserted
+    by buffer-shape inspection of the committed shards."""
+    code = """
+    import json, jax, jax.numpy as jnp, numpy as np
+    from repro.config.base import ParallelConfig, RunConfig, TrainConfig
+    from repro.config.registry import get_arch
+    from repro.launch.mesh import make_mesh
+    from repro.runtime.trainer import Trainer
+
+    cfg = get_arch("qwen3-8b").reduced()
+    train = TrainConfig(global_batch=8, seq_len=32, warmup_steps=2,
+                        total_steps=10, checkpoint_every=10**6,
+                        checkpoint_dir="/tmp/repro_fsdp_oracle")
+    mesh = make_mesh((4,), ("data",))
+    runs = {
+        "fsdp": ParallelConfig(param_shard=True, remat="none"),
+        "repl": ParallelConfig(param_shard=False, remat="none"),
+        "two_phase": ParallelConfig(param_shard=False, overlap="two_phase",
+                                    remat="none"),
+    }
+    state, out = {}, {}
+    for name, par in runs.items():
+        t = Trainer(RunConfig(cfg, par, train), mesh=mesh)
+        t.train(3)
+        state[name] = t
+    def leaves32(tree):
+        return [np.asarray(l, np.float32) for l in jax.tree.leaves(tree)]
+    f, r, tp = state["fsdp"], state["repl"], state["two_phase"]
+    lf = [m["loss"] for m in f.metrics_log]
+    out["losses_equal"] = (
+        np.allclose(lf, [m["loss"] for m in r.metrics_log], rtol=1e-6)
+        and np.allclose(lf, [m["loss"] for m in tp.metrics_log], rtol=1e-6))
+    # vs the replicated hdot step: same per-leaf reduction dtypes, so the
+    # only float-order freedom is the grad-norm partial sums (~1e-7 rel)
+    out["params_match_repl"] = all(
+        np.allclose(a, b, rtol=1e-5, atol=1e-6)
+        for a, b in zip(leaves32(f.full_params()), leaves32(r.params)))
+    # vs two_phase: its monolithic concat upcasts bf16 grads to f32 before
+    # the reduce, so bf16 weights may differ by an ulp after 3 updates
+    out["params_match_two_phase"] = all(
+        np.allclose(a, c, rtol=1e-2, atol=1e-3)
+        for a, c in zip(leaves32(f.full_params()), leaves32(tp.params)))
+    # optimizer moments: reassemble the flat f32 shard buffers leaf-wise
+    from repro.core.overlap import fsdp_unshard_full
+    m_f = fsdp_unshard_full(f.opt_state["m"], f._fsdp_layout)
+    out["moments_match"] = all(
+        np.allclose(a, b, rtol=1e-5, atol=1e-7)
+        for a, b in zip(leaves32(m_f), leaves32(r.opt_state["m"])))
+    # residency: each committed shard holds exactly padded/4 elements
+    layout = f._fsdp_layout
+    def dev_bytes(tree):
+        return sum(l.addressable_shards[0].data.size
+                   * l.addressable_shards[0].data.dtype.itemsize
+                   for l in jax.tree.leaves(tree))
+    out["param_shard_bytes_exact"] = dev_bytes(f.params) == layout.shard_bytes()
+    full_bytes = sum(
+        g.padded * jnp.dtype(g.dtype).itemsize for g in layout.groups)
+    out["param_residency_quarter"] = dev_bytes(f.params) * 4 == full_bytes
+    mv = {"m": f.opt_state["m"], "v": f.opt_state["v"]}
+    full_f32 = sum(g.padded for g in layout.groups) * 4
+    out["opt_residency_quarter"] = dev_bytes(mv) * 4 == 2 * full_f32
+    print(json.dumps(out))
+    """
+    r = run_devices(code, 4)
+    assert all(r.values()), r
+
+
+@pytest.mark.slow
+def test_fsdp_step_hlo_one_rs_one_ag_per_bucket_reverse_emission():
+    """Collective structure of the compiled ZeRO-3 step on 4 devices: exactly
+    ONE reduce-scatter and ONE all-gather per flat bucket buffer, each
+    scatter output shard-sized (grad residency leaves the program at 1/4),
+    all-gathers EMITTED in forward bucket order and reduce-scatters in
+    REVERSE — the last-backward bucket's collective enters the program
+    first, before every earlier bucket's, which is the priority order XLA's
+    latency-hiding scheduler launches them in while the remaining backward
+    still computes. Emission order is read off channel_id, which jax assigns
+    in trace order (the scheduled text order is backend-dependent)."""
+    code = """
+    import json, re, jax, jax.numpy as jnp, numpy as np
+    from repro.config.base import ParallelConfig, RunConfig, TrainConfig
+    from repro.config.registry import get_arch
+    from repro.launch.mesh import make_mesh
+    from repro.runtime.trainer import Trainer
+
+    cfg = get_arch("qwen3-8b").reduced()
+    train = TrainConfig(global_batch=8, seq_len=32, warmup_steps=2,
+                        total_steps=10, checkpoint_every=10**6,
+                        checkpoint_dir="/tmp/repro_fsdp_hlo")
+    mesh = make_mesh((4,), ("data",))
+    t = Trainer(RunConfig(cfg, ParallelConfig(param_shard=True, remat="none"),
+                          train), mesh=mesh)
+    t.train(1)
+    layout = t._fsdp_layout
+    batch = t._place_batch(t._augment_frontend(t.data.batch_at(1)))
+    txt = t._jit_step.lower(t.params, t.opt_state, batch).compile().as_text()
+
+    def sized_channels(kind):
+        # [(channel_id, result_elements)] for every <kind> op definition
+        out = []
+        for ln in txt.splitlines():
+            m = re.search(rf"= [a-z0-9]+\\[(\\d+)\\]\\S* {kind}\\(", ln)
+            c = re.search(r"channel_id=(\\d+)", ln)
+            if m and c:
+                out.append((int(c.group(1)), int(m.group(1))))
+        return [s for _, s in sorted(out)]
+
+    rs, ag = sized_channels("reduce-scatter"), sized_channels("all-gather")
+    out = {
+        "one_rs_per_bucket": len(rs) == len(layout.groups),
+        "one_ag_per_bucket": len(ag) == len(layout.groups),
+        # scatter outputs are shard-sized: grads leave the program at 1/4
+        "rs_shard_sized": rs == [g.padded // 4
+                                 for g in reversed(layout.groups)],
+        # gathers rebuild the full buffers in forward bucket order
+        "ag_forward_order": ag == [g.padded for g in layout.groups],
+    }
+    print(json.dumps(out))
+    """
+    r = run_devices(code, 4)
+    assert all(r.values()), r
+
+
+@pytest.mark.slow
+def test_grad_sync_reverse_topo_emission_order_4dev():
+    """The replicated explicit schedule with layer provenance: per-bucket
+    psums are EMITTED last-backward-first. channel_id records trace order,
+    so the deepest bucket's all-reduce must carry the lowest channel id —
+    with order='tree' the same buckets are emitted shallowest-first."""
+    code = """
+    import json, re, functools, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core.overlap import grad_sync
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4,), ("data",))
+    # distinctive sizes per depth so buckets are identifiable in HLO
+    tree = {"embed": jnp.zeros((11,)), "w1": jnp.zeros((23,)),
+            "w2": jnp.zeros((37,)), "head": jnp.zeros((53,))}
+    layers = {"embed": 0, "w1": 1, "w2": 2, "head": 3}
+    def emitted_sizes(order):
+        f = jax.jit(jax.shard_map(
+            functools.partial(grad_sync, axes="data", mode="hdot",
+                              num_buckets=4, layers=layers, order=order),
+            mesh=mesh, in_specs=(P(),), out_specs=P()))
+        txt = f.lower(tree).compile().as_text()
+        out = []
+        for ln in txt.splitlines():
+            m = re.search(r"= [a-z0-9]+\\[(\\d+)\\]\\S* all-reduce\\(", ln)
+            c = re.search(r"channel_id=(\\d+)", ln)
+            if m and c:
+                out.append((int(c.group(1)), int(m.group(1))))
+        return [s for _, s in sorted(out)]
+    print(json.dumps({
+        "reverse_topo": emitted_sizes("reverse_topo"),
+        "tree": emitted_sizes("tree"),
+    }))
+    """
+    r = run_devices(code, 4)
+    assert r["reverse_topo"] == [53, 37, 23, 11], r
+    assert r["tree"] == [11, 23, 37, 53], r
+
+
+@pytest.mark.slow
 def test_halo_scan_peeled_ppermute_count_4dev():
     """The drain-step peel drops one ppermute pair per solve. Fully unrolled,
     a steps-step hdot scan compiles to exactly 2*steps collective-permutes
