@@ -24,6 +24,8 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Tuple
 
+from repro.analysis.memtraffic import collective_wire_bytes
+
 _DTYPE_BYTES = {
     "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
     "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
@@ -142,21 +144,13 @@ def parse_collectives(hlo_text: str) -> CollectiveSummary:
             # start result tuple carries (operand, result); result is larger
             rb = rb / 2 if rb else rb
         g = _group_size(line)
+        wire = collective_wire_bytes(kind, rb, g)
         if kind == "all-gather":
             operand = rb / max(g, 1)
-            wire = operand * (g - 1)
         elif kind == "reduce-scatter":
             operand = rb * g
-            wire = rb * (g - 1)
-        elif kind == "all-reduce":
+        else:  # all-reduce / all-to-all / collective-permute
             operand = rb
-            wire = 2.0 * rb * (g - 1) / max(g, 1)
-        elif kind == "all-to-all":
-            operand = rb
-            wire = rb * (g - 1) / max(g, 1)
-        else:  # collective-permute
-            operand = rb
-            wire = rb
         dts = {dt for dt, _ in _SHAPE_RE.findall(m.group("result"))
                if dt in _DTYPE_BYTES}
         dtype = dts.pop() if len(dts) == 1 else ",".join(sorted(dts))

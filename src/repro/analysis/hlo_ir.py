@@ -1,0 +1,676 @@
+"""A real HLO-text parser: modules, computations, instructions, dataflow.
+
+`analysis/hlo.py` answers "how many bytes cross the wire" with line-local
+regexes; the schedule *linter* (`analysis/hlo_lint.py`) needs actual program
+structure — which op consumes which, across `call` boundaries, with tuple
+elements tracked — so this module parses HLO text (both the pre-optimization
+trace-order dump from ``lowered.compiler_ir('hlo').as_hlo_text()`` and the
+post-compile ``compiled.as_text()``) into a small IR:
+
+  HloModule ── computations{name: HloComputation} ── instructions[HloInstruction]
+
+plus the graph queries the lint rules are built on:
+
+  * ``users``/``operands`` maps per computation,
+  * interprocedural *taint reachability* (`reaches_live_compute`): does a
+    value ever feed arithmetic, tracking tuple-element indices through
+    ``tuple``/``get-tuple-element``/``call`` so a dead drain exchange that
+    rides a scan carry to an unused output is still recognized as dead,
+  * intra-computation ancestor/descendant sets (`independent_compute`): the
+    static form of "is there compute the scheduler could overlap this
+    collective with".
+
+Parsing is line-oriented and intentionally forgiving: unknown attributes ride
+along as raw text, unknown opcodes parse fine. The linter must never crash on
+an HLO dialect wobble — worst case a rule sees fewer ops and reports that.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+# dtype -> bytes per element (mirrors analysis/hlo.py, shared via memtraffic)
+DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2fnuz": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# Opcodes that DO math. Anything here (or a call/fusion/while that contains
+# one) keeps a value "alive" for DEAD-DRAIN and counts as overlappable work
+# for NO-OVERLAP-WINDOW. Data movement (slice/concat/reshape/...) is
+# deliberately excluded: assembling a padded block is not compute.
+COMPUTE_OPS = frozenset({
+    "add", "subtract", "multiply", "divide", "dot", "convolution",
+    "reduce", "reduce-window", "map", "sort", "scatter", "select-and-scatter",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "logistic", "rsqrt", "sqrt", "cbrt", "power", "negate", "abs", "sign",
+    "maximum", "minimum", "clamp", "select", "compare", "atan2", "remainder",
+    "sine", "cosine", "tan", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "and", "or", "xor", "not", "shift-left",
+    "shift-right-arithmetic", "shift-right-logical", "fusion", "cholesky",
+    "triangular-solve", "fft", "erf", "expm1", "log1p",
+})
+
+# Container/control opcodes whose compute-ness is decided by their callee(s).
+_CALLING_OPS = frozenset({"call", "while", "conditional", "fusion",
+                          "custom-call", "async-start"})
+
+# one typed shape: bf16[4096,64] (layout braces optional, handled outside)
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?P<root>ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<type>\([^=]*?\)|\S+)\s+(?P<opcode>[\w\-]+)\(")
+_COMP_RE = re.compile(
+    r"^(?P<entry>ENTRY\s+)?%?(?P<name>[\w.\-]+)"
+    r"(?:\s+\(.*\)\s*->\s*.+?)?\s*\{\s*$")
+_NAME_TOKEN_RE = re.compile(r"%([\w.\-]+)")
+# HLO interleaves position comments into long tuples/operand lists
+# ("/*index=5*/"); strip before matching
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_BARE_NAME_RE = re.compile(r"^[A-Za-z_][\w.\-]*$")
+_CHANNEL_RE = re.compile(r"channel_id=(\d+)")
+_INDEX_RE = re.compile(r"\bindex=(\d+)")
+_CALLEE_RE = re.compile(r"(?:to_apply|body|condition|called_computations=\{|"
+                        r"branch_computations=\{)[=]?%?([\w.\-]+)")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+
+
+@dataclass
+class HloInstruction:
+    name: str
+    opcode: str
+    shapes: Tuple[Tuple[str, Tuple[int, ...]], ...]  # (dtype, dims) per part
+    is_tuple: bool
+    operands: Tuple[str, ...]
+    attr_text: str                      # raw text after the operand list
+    is_root: bool
+    line_no: int                        # 1-based into the linted text
+    raw: str
+
+    # ------------------------------------------------------------- accessors
+    @property
+    def channel_id(self) -> Optional[int]:
+        m = _CHANNEL_RE.search(self.attr_text)
+        return int(m.group(1)) if m else None
+
+    @property
+    def tuple_index(self) -> Optional[int]:
+        m = _INDEX_RE.search(self.attr_text)
+        return int(m.group(1)) if m else None
+
+    @property
+    def called_computations(self) -> Tuple[str, ...]:
+        names = _CALLEE_RE.findall(self.attr_text)
+        # branch/called lists: "a, b, c}" — pull every name in the braces
+        m = re.search(r"(?:called_computations|branch_computations)="
+                      r"\{([^}]*)\}", self.attr_text)
+        if m:
+            names = [n for n in names if n not in m.group(1)]
+            names += [t.strip().lstrip("%")
+                      for t in m.group(1).split(",") if t.strip()]
+        return tuple(dict.fromkeys(names))
+
+    @property
+    def source_target_pairs(self) -> Tuple[Tuple[int, int], ...]:
+        m = _PAIRS_RE.search(self.attr_text)
+        if not m:
+            return ()
+        return tuple(tuple(int(v) for v in p.split(","))
+                     for p in re.findall(r"\{(\d+,\d+)\}", m.group(0)))
+
+    @property
+    def replica_group_size(self) -> int:
+        m = _GROUPS_IOTA_RE.search(self.attr_text)
+        if m:
+            return int(m.group(2))
+        m = _GROUPS_LIST_RE.search(self.attr_text)
+        if m:
+            return max(1, m.group(1).count(",") + 1)
+        return 2  # collective-permute / unknown: point-to-point
+
+    @property
+    def collective_kind(self) -> Optional[str]:
+        for k in COLLECTIVE_OPS:
+            if self.opcode == k or self.opcode in (f"{k}-start", f"{k}-done"):
+                return k
+        return None
+
+    def elements(self, part: Optional[int] = None) -> int:
+        parts = self.shapes if part is None else (self.shapes[part],)
+        total = 0
+        for _, dims in parts:
+            n = 1
+            for d in dims:
+                n *= d
+            total += n
+        return total
+
+    def result_bytes(self) -> float:
+        return sum(self.elements(i) * DTYPE_BYTES.get(dt, 0)
+                   for i, (dt, _) in enumerate(self.shapes))
+
+    @property
+    def dtypes(self) -> Tuple[str, ...]:
+        return tuple(dt for dt, _ in self.shapes)
+
+
+@dataclass
+class HloComputation:
+    name: str
+    is_entry: bool
+    instructions: List[HloInstruction] = field(default_factory=list)
+    by_name: Dict[str, HloInstruction] = field(default_factory=dict)
+
+    @property
+    def root(self) -> Optional[HloInstruction]:
+        for i in self.instructions:
+            if i.is_root:
+                return i
+        return self.instructions[-1] if self.instructions else None
+
+    def users_map(self) -> Dict[str, List[HloInstruction]]:
+        users: Dict[str, List[HloInstruction]] = {}
+        for instr in self.instructions:
+            for op in instr.operands:
+                users.setdefault(op, []).append(instr)
+        return users
+
+
+@dataclass
+class HloModule:
+    name: str
+    header: str
+    computations: Dict[str, HloComputation]
+    entry: Optional[HloComputation]
+    n_aliased: int                      # input_output_alias entries
+    n_donors: int                       # buffer_donor entries (pre-opt)
+
+    def all_instructions(self) -> Iterator[Tuple[HloComputation, HloInstruction]]:
+        for comp in self.computations.values():
+            for instr in comp.instructions:
+                yield comp, instr
+
+    def collectives(self, kinds: Optional[Sequence[str]] = None
+                    ) -> List[Tuple[HloComputation, HloInstruction]]:
+        """Collective op *definitions* ('-done' halves skipped so async pairs
+        count once), in text order."""
+        out = []
+        for comp, instr in self.all_instructions():
+            k = instr.collective_kind
+            if k is None or instr.opcode.endswith("-done"):
+                continue
+            if kinds is None or k in kinds:
+                out.append((comp, instr))
+        return out
+
+    def call_sites(self, callee: str) -> List[Tuple[HloComputation, HloInstruction]]:
+        return [(c, i) for c, i in self.all_instructions()
+                if callee in i.called_computations]
+
+
+# ------------------------------------------------------------------ parsing
+def _parse_shapes(type_text: str) -> Tuple[Tuple[Tuple[str, Tuple[int, ...]], ...], bool]:
+    is_tuple = type_text.startswith("(")
+    shapes = []
+    for dt, dims in _SHAPE_RE.findall(type_text):
+        if dt not in DTYPE_BYTES and dt != "token":
+            continue
+        dims_t = tuple(int(d) for d in dims.split(",")) if dims else ()
+        shapes.append((dt, dims_t))
+    return tuple(shapes), is_tuple
+
+
+def _split_operands(text: str, opcode: str) -> Tuple[str, ...]:
+    """Operand names from the region inside the op's parens. Handles both the
+    bare pre-opt form `add(add.14, slice.15)` and the typed post-opt form
+    `add(f32[1,4]{1,0} %add.55, ...)`."""
+    if opcode in ("parameter", "constant", "iota"):
+        return ()
+    if "%" in text:
+        return tuple(_NAME_TOKEN_RE.findall(text))
+    out = []
+    for tok in text.split(","):
+        tok = tok.strip()
+        # strip a leading type annotation if present without %
+        if "[" in tok and "]" in tok and " " in tok:
+            tok = tok.rsplit(" ", 1)[-1]
+        if _BARE_NAME_RE.match(tok):
+            out.append(tok)
+    return tuple(out)
+
+
+def _operand_region(line: str, start: int) -> Tuple[str, int]:
+    """Text inside the balanced parens opening at `start`; returns (region,
+    index one past the closing paren). Unterminated lines (truncated dumps)
+    return the remainder."""
+    depth, i = 0, start
+    while i < len(line):
+        c = line[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                return line[start + 1:i], i + 1
+        i += 1
+    return line[start + 1:], len(line)
+
+
+def _count_header_entries(header: str, key: str, sep: str) -> int:
+    m = re.search(re.escape(key) + r"=\{", header)
+    if not m:
+        return 0
+    depth, out = 1, []
+    for c in header[m.end():]:
+        if c == "{":
+            depth += 1
+        elif c == "}":
+            depth -= 1
+            if depth == 0:
+                break
+        out.append(c)
+    return "".join(out).count(sep)
+
+
+def parse_hlo_module(text: str) -> HloModule:
+    lines = text.splitlines()
+    header = ""
+    name = ""
+    comps: Dict[str, HloComputation] = {}
+    entry: Optional[HloComputation] = None
+    current: Optional[HloComputation] = None
+    for ln_no, line in enumerate(lines, start=1):
+        stripped = line.strip()
+        if stripped.startswith("HloModule"):
+            header = stripped
+            m = re.match(r"HloModule\s+([\w.\-]+)", stripped)
+            name = m.group(1) if m else ""
+            continue
+        if current is None:
+            m = _COMP_RE.match(stripped)
+            if m and not stripped.startswith(("//", "#")):
+                current = HloComputation(name=m.group("name"),
+                                         is_entry=bool(m.group("entry")))
+            continue
+        if stripped == "}":
+            comps[current.name] = current
+            if current.is_entry:
+                entry = current
+            current = None
+            continue
+        line = _COMMENT_RE.sub("", line)
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        region, end = _operand_region(line, m.end() - 1)
+        shapes, is_tuple = _parse_shapes(m.group("type"))
+        instr = HloInstruction(
+            name=m.group("name"), opcode=m.group("opcode"), shapes=shapes,
+            is_tuple=is_tuple,
+            operands=_split_operands(region, m.group("opcode")),
+            attr_text=line[end:], is_root=bool(m.group("root")),
+            line_no=ln_no, raw=stripped)
+        current.instructions.append(instr)
+        current.by_name[instr.name] = instr
+    if current is not None:  # unterminated dump: keep what we have
+        comps[current.name] = current
+        if current.is_entry and entry is None:
+            entry = current
+    n_alias = _count_header_entries(header, "input_output_alias", ":")
+    n_donor = _count_header_entries(header, "buffer_donor", "(")
+    return HloModule(name=name, header=header, computations=comps,
+                     entry=entry, n_aliased=n_alias, n_donors=n_donor)
+
+
+# ------------------------------------------------------------ graph queries
+def computation_has_compute(module: HloModule, comp_name: str,
+                            _seen: Optional[Set[str]] = None) -> bool:
+    """Does this computation (or anything it calls) contain arithmetic?"""
+    seen = _seen if _seen is not None else set()
+    if comp_name in seen:
+        return False
+    seen.add(comp_name)
+    comp = module.computations.get(comp_name)
+    if comp is None:
+        return True  # unknown callee (e.g. custom-call target): conservative
+    for instr in comp.instructions:
+        if instr.opcode in COMPUTE_OPS:
+            return True
+        if instr.collective_kind is not None:
+            continue  # a collective's to_apply reducer is not program compute
+        for callee in instr.called_computations:
+            if computation_has_compute(module, callee, seen):
+                return True
+    return False
+
+
+def is_compute(module: HloModule, instr: HloInstruction) -> bool:
+    if instr.opcode in COMPUTE_OPS:
+        return True
+    if instr.opcode in _CALLING_OPS:
+        callees = instr.called_computations
+        if not callees:
+            # opaque target (Sharding custom-calls are pure data movement)
+            return instr.opcode not in ("custom-call",)
+        return any(computation_has_compute(module, c) for c in callees)
+    return False
+
+
+_WHOLE = -1  # taint marker: the whole value (vs a single tuple element)
+
+
+def reaches_live_compute(module: HloModule, comp: HloComputation,
+                         instr: HloInstruction) -> bool:
+    """True if `instr`'s value can ever feed a compute op (or escape through
+    the entry root / an opaque boundary). Tracks tuple-element indices through
+    ``tuple`` / ``get-tuple-element`` and across ``call`` sites in both
+    directions (operand -> callee parameter, callee root -> call result), so
+    a drain exchange whose result only rides the scan carry to an unused
+    output is correctly found dead. Conservative everywhere else: while /
+    conditional / unknown consumers count as live."""
+    # worklist of (computation, instruction, element) taints
+    seen: Set[Tuple[str, str, int]] = set()
+    work: List[Tuple[HloComputation, HloInstruction, int]] = [
+        (comp, instr, _WHOLE)]
+    users_maps: Dict[str, Dict[str, List[HloInstruction]]] = {}
+
+    def users_of(c: HloComputation) -> Dict[str, List[HloInstruction]]:
+        if c.name not in users_maps:
+            users_maps[c.name] = c.users_map()
+        return users_maps[c.name]
+
+    while work:
+        c, v, elem = work.pop()
+        key = (c.name, v.name, elem)
+        if key in seen:
+            continue
+        seen.add(key)
+        tainted_users = users_of(c).get(v.name, [])
+        if v.is_root:
+            if c.is_entry:
+                return True  # program output: live by definition
+            for site_comp, site in module.call_sites(c.name):
+                if site.opcode == "call":
+                    work.append((site_comp, site, elem))
+                else:
+                    return True  # root of a while body / cond branch: live
+        for u in tainted_users:
+            if u.opcode == "tuple":
+                positions = [k for k, op in enumerate(u.operands)
+                             if op == v.name]
+                if elem != _WHOLE:
+                    # value is already an element of a tuple being re-tupled:
+                    # nested tuple — give up precision, treat as live
+                    return True
+                for k in positions:
+                    work.append((c, u, k))
+                continue
+            if u.opcode == "get-tuple-element":
+                idx = u.tuple_index
+                if elem == _WHOLE or idx is None or idx == elem:
+                    work.append((c, u, _WHOLE))
+                continue
+            if u.opcode == "call" and u.called_computations:
+                callee = module.computations.get(u.called_computations[0])
+                if callee is None:
+                    return True
+                positions = [k for k, op in enumerate(u.operands)
+                             if op == v.name]
+                for p in callee.instructions:
+                    if p.opcode != "parameter":
+                        continue
+                    m = re.match(r".*\((\d+)\)", p.raw)
+                    pidx = int(m.group(1)) if m else None
+                    if pidx in positions:
+                        work.append((callee, p, _WHOLE))
+                continue
+            if is_compute(module, u):
+                return True
+            if u.opcode in ("while", "conditional", "custom-call",
+                            "optimization-barrier", "all-reduce", "all-gather",
+                            "reduce-scatter", "all-to-all", "send", "outfeed",
+                            "dynamic-update-slice", "scatter"):
+                return True  # consumed by control flow / comm / IO: live
+            # pure data movement: keep chasing
+            work.append((c, u, _WHOLE))
+    return False
+
+
+def _closure(comp: HloComputation, start: HloInstruction,
+             forward: bool) -> Set[str]:
+    """Transitive descendants (forward=True) or ancestors within `comp`."""
+    users = comp.users_map()
+    out: Set[str] = set()
+    work = [start]
+    while work:
+        v = work.pop()
+        nxt = (users.get(v.name, []) if forward
+               else [comp.by_name[o] for o in v.operands if o in comp.by_name])
+        for u in nxt:
+            if u.name not in out:
+                out.add(u.name)
+                work.append(u)
+    return out
+
+
+def _mark_callee_comps(module: HloModule, names, out: Set[str]) -> None:
+    """Transitively add `names` and every computation they call to `out`."""
+    work = list(names)
+    while work:
+        n = work.pop()
+        if n in out:
+            continue
+        out.add(n)
+        callee = module.computations.get(n)
+        if callee is None:
+            continue
+        for i in callee.instructions:
+            work.extend(i.called_computations)
+
+
+_ATOMIC_CONSUMERS = frozenset((
+    "conditional", "custom-call", "optimization-barrier",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "send", "outfeed", "dynamic-update-slice",
+    "scatter", "fusion", "sort", "reduce", "reduce-window"))
+
+
+def _parameter_index(instr: HloInstruction) -> Optional[int]:
+    m = re.match(r".*\((\d+)\)", instr.raw)
+    return int(m.group(1)) if m else None
+
+
+def _params_at(module: HloModule, comp_names, pidx: int
+               ) -> List[Tuple[HloComputation, HloInstruction]]:
+    out = []
+    for n in comp_names:
+        callee = module.computations.get(n)
+        if callee is None:
+            continue
+        for p in callee.instructions:
+            if p.opcode == "parameter" and _parameter_index(p) == pidx:
+                out.append((callee, p))
+    return out
+
+
+def forward_closure(module: HloModule, comp: HloComputation,
+                    instr: HloInstruction
+                    ) -> Tuple[Set[Tuple[str, str]], Set[str]]:
+    """Everything downstream of `instr`, interprocedurally.
+
+    Returns ``(nodes, comps)`` where `nodes` is a set of
+    (computation, instruction) names reachable from `instr`'s value and
+    `comps` is a set of computations whose *entire* contents must be treated
+    as downstream (bodies the taint enters coarsely). Tuple-element precise
+    through ``tuple`` / ``get-tuple-element`` and across ``call`` sites, so
+    a halo that only the boundary strips read does not drag the interior
+    chunks into the closure.
+
+    A while body's root exits element-precisely to the while's result, but
+    the taint does NOT re-enter the body through the back-edge: a collective
+    is in flight only from launch until its first consumer fires, and a
+    next-iteration consumer of a loop-carried value is (by the loop's own
+    dataflow) also an ancestor of the collective's node, so the symmetric
+    ancestor check in :func:`independent_compute` already excludes it.
+    Re-entering would merge loop instances and mark the next iteration's
+    interior chunks — the very work the exchange flies behind — as
+    consumers.
+    """
+    seen: Set[Tuple[str, str, int]] = set()
+    nodes: Set[Tuple[str, str]] = set()
+    comps: Set[str] = set()
+    work: List[Tuple[HloComputation, HloInstruction, int]] = [
+        (comp, instr, _WHOLE)]
+    users_maps: Dict[str, Dict[str, List[HloInstruction]]] = {}
+
+    def users_of(c: HloComputation) -> Dict[str, List[HloInstruction]]:
+        if c.name not in users_maps:
+            users_maps[c.name] = c.users_map()
+        return users_maps[c.name]
+
+    while work:
+        c, v, elem = work.pop()
+        key = (c.name, v.name, elem)
+        if key in seen:
+            continue
+        seen.add(key)
+        nodes.add((c.name, v.name))
+        if v.is_root and not c.is_entry:
+            for site_comp, site in module.call_sites(c.name):
+                if site.opcode in ("call", "while"):
+                    # call result / while loop exit: same tuple element
+                    work.append((site_comp, site, elem))
+                else:
+                    # root of a cond branch etc.: give up precision
+                    _mark_callee_comps(module, site.called_computations,
+                                       comps)
+                    work.append((site_comp, site, _WHOLE))
+        for u in users_of(c).get(v.name, []):
+            if u.opcode == "tuple":
+                if elem != _WHOLE:
+                    work.append((c, u, _WHOLE))  # nested: degrade precision
+                    continue
+                for k, op in enumerate(u.operands):
+                    if op == v.name:
+                        work.append((c, u, k))
+                continue
+            if u.opcode == "get-tuple-element":
+                idx = u.tuple_index
+                if elem == _WHOLE or idx is None or idx == elem:
+                    work.append((c, u, _WHOLE))
+                continue
+            if u.opcode in ("call", "while") and u.called_computations:
+                nodes.add((c.name, u.name))
+                positions = [k for k, op in enumerate(u.operands)
+                             if op == v.name]
+                known = True
+                for pos in positions:
+                    hits = _params_at(module, u.called_computations, pos)
+                    if not hits:
+                        known = False
+                    for callee, p in hits:
+                        # the parameter IS the operand, so the taint's tuple
+                        # element index survives across the frame boundary
+                        work.append((callee, p, elem))
+                if u.opcode == "while":
+                    work.append((c, u, elem))  # loop result, same element
+                elif not known:
+                    work.append((c, u, _WHOLE))
+                continue
+            if u.opcode in _ATOMIC_CONSUMERS:
+                _mark_callee_comps(module, u.called_computations, comps)
+                work.append((c, u, _WHOLE))
+                continue
+            work.append((c, u, _WHOLE))
+    return nodes, comps
+
+
+def backward_closure(module: HloModule, comp: HloComputation,
+                     instr: HloInstruction
+                     ) -> Tuple[Set[Tuple[str, str]], Set[str]]:
+    """Everything upstream of `instr`, interprocedurally (coarse: a call or
+    while reached through its *result* marks its whole callee closure as
+    upstream).
+
+    A while reached through its own body's parameter is different: only the
+    loop's init operands are ancestors along that path. Marking the body
+    would merge loop instances — every op in the body would become its own
+    ancestor, erasing exactly the intra-iteration windows (stage-2 x/y
+    stencils vs. the stage-1 exchange) this analysis exists to find.
+    """
+    # work items: (computation, instruction, mark_callees)
+    seen: Set[Tuple[str, str, bool]] = set()
+    nodes: Set[Tuple[str, str]] = set()
+    comps: Set[str] = set()
+    work: List[Tuple[HloComputation, HloInstruction, bool]] = [
+        (comp, instr, True)]
+    while work:
+        c, v, mark = work.pop()
+        key = (c.name, v.name, mark)
+        if key in seen:
+            continue
+        seen.add(key)
+        nodes.add((c.name, v.name))
+        for op in v.operands:
+            if op in c.by_name:
+                work.append((c, c.by_name[op], True))
+        if v.opcode == "parameter" and not c.is_entry:
+            pidx = _parameter_index(v)
+            for site_comp, site in module.call_sites(c.name):
+                if site.opcode == "call" and pidx is not None \
+                        and pidx < len(site.operands):
+                    op = site.operands[pidx]
+                    if op in site_comp.by_name:
+                        work.append((site_comp, site_comp.by_name[op], True))
+                else:
+                    # while/cond carry: init operands feed the parameter;
+                    # the body itself is the back-edge — don't mark it
+                    work.append((site_comp, site, False))
+        elif mark and v.called_computations and v.opcode in _CALLING_OPS:
+            _mark_callee_comps(module, v.called_computations, comps)
+    return nodes, comps
+
+
+def independent_compute(module: HloModule, comp: HloComputation,
+                        instr: HloInstruction,
+                        min_elements: int = 2) -> List[HloInstruction]:
+    """Compute instructions anywhere in the module that neither feed `instr`
+    nor consume its in-flight result — the work an async scheduler could
+    overlap the collective with once XLA inlines the call tree.
+
+    Interprocedural and tuple-element precise on the forward side: a step
+    call (or while carry) whose halo outputs feed only the next step's
+    boundary strips leaves that step's interior chunks out of the closure,
+    so a pipeline-fill exchange correctly finds the first iteration's
+    interior compute as its overlap partner, and a loop-carried drain
+    exchange finds the peeled step's interior chunks.
+
+    Scalar chaff (loss logging, lr schedules, collective reducers) is
+    excluded via `min_elements`."""
+    fwd_nodes, fwd_comps = forward_closure(module, comp, instr)
+    bwd_nodes, bwd_comps = backward_closure(module, comp, instr)
+    related = fwd_nodes | bwd_nodes
+    related.add((comp.name, instr.name))
+    related_comps = fwd_comps | bwd_comps
+    out: List[HloInstruction] = []
+    for cname, c in module.computations.items():
+        if cname in related_comps:
+            continue
+        for i in c.instructions:
+            if (cname, i.name) in related:
+                continue
+            if is_compute(module, i) and i.elements() >= min_elements:
+                out.append(i)
+    return out

@@ -1,0 +1,171 @@
+"""HLO schedule linter: static analysis that proves the HDOT overlap shape.
+
+The repo's performance story rests on *structural* properties of the lowered
+program — peeled drains, one exchange pair per axis per step, reverse-topo
+bucket emission, one RS/AG per FSDP buffer, grads crossing the wire at param
+width, donated state actually aliased. Benchmarks only notice when these
+break by a lot; this linter notices when they break at all, by parsing the
+PRE-optimization HLO (trace order, no DCE — the schedule as Python emitted
+it, not as XLA cleaned it up) and checking every invariant as a lint rule.
+
+Usage:
+    python -m repro.analysis.hlo_lint                 # lint all canonical targets
+    python -m repro.analysis.hlo_lint -t halo1d,rk3_2d --json findings.json
+    python -m repro.analysis.hlo_lint --list
+
+Library use (tests, CI):
+    from repro.analysis.hlo_lint import lint_text
+    report = lint_text(hlo_text, ctx)
+    assert report.ok, report.render()
+
+Rule catalog and fix hints: docs/analysis.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+from repro.analysis.hlo_ir import parse_hlo_module
+from repro.analysis.rules import ALL_RULES, RULES_BY_ID, LintContext, Severity
+from repro.analysis.rules.base import Finding, Rule, annotate_wire_bytes
+
+
+@dataclass
+class LintReport:
+    target: str
+    module_name: str
+    findings: List[Finding] = field(default_factory=list)
+    n_collectives: int = 0
+    wire_bytes: float = 0.0          # memtraffic ring-model module total
+
+    @property
+    def ok(self) -> bool:
+        return not any(f.severity == Severity.ERROR for f in self.findings)
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == Severity.ERROR]
+
+    def to_dict(self) -> dict:
+        return {
+            "target": self.target, "module": self.module_name,
+            "ok": self.ok, "n_collectives": self.n_collectives,
+            "wire_bytes": round(self.wire_bytes, 1),
+            "findings": [f.to_dict() for f in self.findings],
+        }
+
+    def render(self) -> str:
+        head = (f"{'PASS' if self.ok else 'FAIL'} {self.target:16s} "
+                f"({self.n_collectives} collectives, "
+                f"{self.wire_bytes / 1e3:.1f} kB wire)")
+        if not self.findings:
+            return head
+        return head + "\n" + "\n".join(str(f) for f in self.findings)
+
+
+def lint_text(hlo_text: str, ctx: Optional[LintContext] = None,
+              rules: Optional[Sequence[Rule]] = None,
+              target: str = "") -> LintReport:
+    """Parse `hlo_text` and run the rule set against it."""
+    ctx = ctx or LintContext()
+    module = parse_hlo_module(hlo_text)
+    report = LintReport(target=target or ctx.target or module.name,
+                        module_name=module.name)
+    collectives = module.collectives()
+    report.n_collectives = len(collectives)
+    report.wire_bytes = sum(annotate_wire_bytes(i) or 0.0
+                            for _, i in collectives)
+    for rule in (rules if rules is not None else ALL_RULES):
+        report.findings.extend(rule.check(module, ctx))
+    report.findings.sort(key=lambda f: (Severity.ORDER.get(f.severity, 9),
+                                        f.rule, f.line))
+    return report
+
+
+def lint_target(name: str, rules: Optional[Sequence[Rule]] = None
+                ) -> LintReport:
+    """Lower one canonical program (see ``lint_targets``) and lint it."""
+    from repro.analysis import lint_targets
+
+    tgt = lint_targets.build(name)
+    return lint_text(tgt.hlo_text, tgt.ctx, rules=rules, target=name)
+
+
+# ------------------------------------------------------------------- CLI
+def _select_rules(only: Optional[str]) -> Optional[List[Rule]]:
+    if not only:
+        return None
+    out = []
+    for rid in only.split(","):
+        rid = rid.strip()
+        if rid not in RULES_BY_ID:
+            raise SystemExit(f"unknown rule {rid!r}; known: "
+                             f"{', '.join(sorted(RULES_BY_ID))}")
+        out.append(RULES_BY_ID[rid])
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.hlo_lint",
+        description="Lint canonical HDOT lowerings for schedule regressions.")
+    ap.add_argument("-t", "--targets", default="",
+                    help="comma-separated target names (default: all)")
+    ap.add_argument("-r", "--rules", default="",
+                    help="comma-separated rule ids (default: all)")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write the findings report as JSON")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="host-platform device count for lowering (default 8)")
+    ap.add_argument("--list", action="store_true",
+                    help="list targets and rules, then exit")
+    args = ap.parse_args(argv)
+
+    # must precede the first jax import anywhere in the process
+    if "jax" not in sys.modules:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}").strip()
+
+    from repro.analysis import lint_targets
+
+    if args.list:
+        print("targets:")
+        for name, doc in lint_targets.describe():
+            print(f"  {name:16s} {doc}")
+        print("rules:")
+        for rule in ALL_RULES:
+            print(f"  {rule.id:18s} [{rule.severity}] "
+                  f"{(rule.__doc__ or '').strip().splitlines()[0]}")
+        return 0
+
+    names = ([n.strip() for n in args.targets.split(",") if n.strip()]
+             or lint_targets.all_targets())
+    rules = _select_rules(args.rules)
+    reports = []
+    for name in names:
+        report = lint_target(name, rules=rules)
+        reports.append(report)
+        print(report.render())
+    n_err = sum(len(r.errors) for r in reports)
+    print(f"linted {len(reports)} targets: "
+          f"{sum(r.ok for r in reports)} pass, "
+          f"{sum(not r.ok for r in reports)} fail ({n_err} errors)")
+    if args.json:
+        payload = {
+            "targets": [r.to_dict() for r in reports],
+            "ok": all(r.ok for r in reports),
+            "rules": sorted(RULES_BY_ID),
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}")
+    return 0 if all(r.ok for r in reports) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,520 @@
+"""Canonical lowerings for the HLO schedule linter.
+
+Each target lowers one of the repo's jitted programs — the stencil solvers,
+the raw halo scans, the explicit grad-sync schedules, the lm train steps
+(replicated-HDOT and FSDP) — to PRE-optimization HLO and pairs it with a
+:class:`LintContext` whose expectations are **derived from the same code the
+runtime uses** (``make_buckets`` / ``fsdp_layout`` element counts, the
+schedule's pair-count arithmetic), so the linter cannot drift from the
+implementation.
+
+Lowering is abstract throughout (ShapeDtypeStructs, no parameters
+materialized) — a full lm FSDP target lints in seconds on 8 fake CPU
+devices (set ``--xla_force_host_platform_device_count`` before jax imports;
+the CLI in ``hlo_lint`` does this).
+
+``BROKEN`` holds the mutation fixtures: deliberately mis-scheduled variants
+(unpeeled drain, tree bucket order, two-phase monolithic sync, lost
+donation, double gather) that the test suite asserts DO trigger their rule.
+They are buildable but excluded from ``all_targets()`` so CI lints only the
+canonical set.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Tuple
+
+from repro.analysis.rules import LintContext
+
+# pair-count arithmetic per schedule (permute ops = 2 * pair-sets):
+#   halo_scan / heat2d : one fwd+bwd pair per axis per step, drain peeled
+#   rk3                : 3 stages/step, fill + peeled final stage -> 3*steps
+#   hpccg              : one exchange chain per iter, fill + iters-1
+PERMUTES_HALO = lambda axes, steps: 2 * axes * steps
+PERMUTES_RK3 = lambda axes, steps: 2 * axes * 3 * steps
+PERMUTES_HPCCG = lambda axes, iters: 2 * axes * iters
+
+_HLO_DTYPE = {"float32": "f32", "float64": "f64", "float16": "f16",
+              "bfloat16": "bf16", "int32": "s32", "int64": "s64",
+              "int8": "s8", "uint8": "u8", "uint32": "u32", "bool": "pred",
+              "float8_e4m3fn": "f8e4m3fn", "float8_e5m2": "f8e5m2"}
+
+
+def hlo_dtype(np_dtype) -> str:
+    import numpy as np
+
+    return _HLO_DTYPE.get(np.dtype(np_dtype).name, np.dtype(np_dtype).name)
+
+
+@dataclass
+class Target:
+    name: str
+    hlo_text: str
+    ctx: LintContext
+
+
+TARGETS: Dict[str, Callable[[], Target]] = {}
+BROKEN: Dict[str, Callable[[], Target]] = {}
+
+
+def _register(name: str, registry: Dict):
+    def deco(fn):
+        registry[name] = fn
+        fn.__lint_name__ = name
+        return fn
+    return deco
+
+
+def target(name: str):
+    return _register(name, TARGETS)
+
+
+def broken(name: str):
+    return _register(name, BROKEN)
+
+
+def all_targets() -> List[str]:
+    return list(TARGETS)
+
+
+def describe() -> List[Tuple[str, str]]:
+    return [(n, (fn.__doc__ or "").strip().splitlines()[0])
+            for n, fn in TARGETS.items()]
+
+
+def build(name: str) -> Target:
+    fn = TARGETS.get(name) or BROKEN.get(name)
+    if fn is None:
+        raise KeyError(f"unknown lint target {name!r}; known: "
+                       f"{', '.join([*TARGETS, *BROKEN])}")
+    return fn()
+
+
+def _pre_opt_text(jitted, *specs) -> str:
+    return jitted.lower(*specs).compiler_ir(dialect="hlo").as_hlo_text()
+
+
+# ----------------------------------------------------------- raw halo scans
+def _halo_jit(ndim: int, steps: int, peel: bool, donate: bool = True):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.halo import halo_scan, halo_scan_2d, halo_scan_nd
+    from repro.launch.mesh import make_grid_mesh, make_mesh
+
+    donate_argnums = (0,) if donate else ()
+    if ndim == 1:
+        mesh = make_mesh((4,), ("data",))
+        avg3 = lambda p: (p[:-2] + p[1:-1] + p[2:]) / 3.0
+        f = jax.shard_map(
+            lambda x: halo_scan(x, avg3, "data", 1, 0, steps, periodic=True,
+                                peel=peel, unroll=steps)[0],
+            mesh=mesh, in_specs=(P("data"),), out_specs=P("data"))
+        spec = jax.ShapeDtypeStruct((16, 4), jnp.float32)
+    elif ndim == 2:
+        mesh = make_grid_mesh(2, 2)
+        star = lambda p: (p[1:-1, 1:-1] + p[:-2, 1:-1] + p[2:, 1:-1]
+                          + p[1:-1, :-2] + p[1:-1, 2:]) / 5.0
+        f = jax.shard_map(
+            lambda x: halo_scan_2d(x, star, ("rows", "cols"), 1, (0, 1),
+                                   steps, periodic=True, peel=peel,
+                                   unroll=steps)[0],
+            mesh=mesh, in_specs=(P("rows", "cols"),),
+            out_specs=P("rows", "cols"))
+        spec = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    else:
+        mesh = make_grid_mesh(2, 2, 2)
+        axes = ("planes", "rows", "cols")
+        star3 = lambda p: (p[1:-1, 1:-1, 1:-1] + p[:-2, 1:-1, 1:-1]
+                           + p[2:, 1:-1, 1:-1] + p[1:-1, :-2, 1:-1]
+                           + p[1:-1, 2:, 1:-1] + p[1:-1, 1:-1, :-2]
+                           + p[1:-1, 1:-1, 2:]) / 7.0
+        f = jax.shard_map(
+            lambda x: halo_scan_nd(x, star3, tuple(zip(axes, (0, 1, 2))), 1,
+                                   steps, periodic=True, peel=peel,
+                                   unroll=steps)[0],
+            mesh=mesh, in_specs=(P(*axes),), out_specs=P(*axes))
+        spec = jax.ShapeDtypeStruct((8, 8, 8), jnp.float32)
+    return jax.jit(f, donate_argnums=donate_argnums), spec
+
+
+def _halo_target(name: str, ndim: int) -> Target:
+    steps = 2
+    jitted, spec = _halo_jit(ndim, steps, peel=True)
+    ctx = LintContext(target=name,
+                      expected_permute_total=PERMUTES_HALO(ndim, steps),
+                      expect_donation=True)
+    return Target(name, _pre_opt_text(jitted, spec), ctx)
+
+
+@target("halo1d")
+def _halo1d() -> Target:
+    """halo_scan, 1-D ring of 4, steps=2 unrolled+peeled, donated input."""
+    return _halo_target("halo1d", 1)
+
+
+@target("halo2d")
+def _halo2d() -> Target:
+    """halo_scan_2d on a 2x2 mesh, steps=2 unrolled+peeled, donated input."""
+    return _halo_target("halo2d", 2)
+
+
+@target("halo3d")
+def _halo3d() -> Target:
+    """halo_scan_nd on a 2x2x2 mesh, steps=2 unrolled+peeled, donated."""
+    return _halo_target("halo3d", 3)
+
+
+# --------------------------------------------------------------- solvers
+@target("heat2d_1d")
+def _heat2d_1d() -> Target:
+    """heat2d Jacobi sweeps, 1-D slab decomposition over 4 devices."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.stencil import _heat2d_solver
+    from repro.launch.mesh import make_mesh
+
+    f = _heat2d_solver(make_mesh((4,), ("data",)), "data", 2, "hdot", 4)
+    txt = _pre_opt_text(f, jax.ShapeDtypeStruct((32, 32), jnp.float32))
+    return Target("heat2d_1d", txt,
+                  LintContext(target="heat2d_1d",
+                              expected_permute_total=PERMUTES_HALO(1, 2)))
+
+
+@target("heat2d_2d")
+def _heat2d_2d() -> Target:
+    """heat2d with true 2-D (rows x cols) block decomposition on 2x2."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.stencil import _heat2d_solver
+    from repro.launch.mesh import make_grid_mesh
+
+    f = _heat2d_solver(make_grid_mesh(2, 2), ("rows", "cols"), 2, "hdot",
+                       (2, 2))
+    txt = _pre_opt_text(f, jax.ShapeDtypeStruct((32, 32), jnp.float32))
+    return Target("heat2d_2d", txt,
+                  LintContext(target="heat2d_2d",
+                              expected_permute_total=PERMUTES_HALO(2, 2)))
+
+
+@target("rk3_1d")
+def _rk3_1d() -> Target:
+    """RK3 advection, z-slab decomposition over 4 devices, steps=2."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.stencil import _rk3_solver
+    from repro.launch.mesh import make_mesh
+
+    # global dim 2 = 64 so the local shard keeps >= 16 cells (the pipelined
+    # stage-carried path; smaller shards take the per-step fallback)
+    f = _rk3_solver(make_mesh((4,), ("data",)), "data", 2, 0.01, "hdot")
+    txt = _pre_opt_text(f, jax.ShapeDtypeStruct((12, 16, 64), jnp.float32))
+    return Target("rk3_1d", txt,
+                  LintContext(target="rk3_1d",
+                              expected_permute_total=PERMUTES_RK3(1, 2)))
+
+
+@target("rk3_2d")
+def _rk3_2d() -> Target:
+    """RK3 on a (y, z) 2x2 grid mesh, stage-carried halos on both axes."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.stencil import _rk3_solver
+    from repro.launch.mesh import make_grid_mesh
+
+    f = _rk3_solver(make_grid_mesh(2, 2), ("rows", "cols"), 2, 0.01, "hdot")
+    txt = _pre_opt_text(f, jax.ShapeDtypeStruct((12, 32, 32), jnp.float32))
+    return Target("rk3_2d", txt,
+                  LintContext(target="rk3_2d",
+                              expected_permute_total=PERMUTES_RK3(2, 2)))
+
+
+@target("hpccg_1d")
+def _hpccg_1d() -> Target:
+    """HPCCG CG iterations, 1-D decomposition over 4 devices, iters=2."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.stencil import _hpccg_solver
+    from repro.launch.mesh import make_mesh
+
+    f = _hpccg_solver(make_mesh((4,), ("data",)), "data", 2, "hdot", 4)
+    txt = _pre_opt_text(f, jax.ShapeDtypeStruct((12, 20, 20), jnp.float32))
+    return Target("hpccg_1d", txt,
+                  LintContext(target="hpccg_1d",
+                              expected_permute_total=PERMUTES_HPCCG(1, 2)))
+
+
+@target("hpccg_3d")
+def _hpccg_3d() -> Target:
+    """HPCCG on a 2x2x2 (planes x rows x cols) mesh, iters=2."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.stencil import _hpccg_solver
+    from repro.launch.mesh import make_grid_mesh
+
+    f = _hpccg_solver(make_grid_mesh(2, 2, 2), ("planes", "rows", "cols"),
+                      2, "hdot", 4)
+    txt = _pre_opt_text(f, jax.ShapeDtypeStruct((12, 20, 20), jnp.float32))
+    return Target("hpccg_3d", txt,
+                  LintContext(target="hpccg_3d",
+                              expected_permute_total=PERMUTES_HPCCG(3, 2)))
+
+
+# ------------------------------------------------------------- grad sync
+_SYNC_TREE_SIZES = {"embed": 11, "w1": 23, "w2": 37, "head": 53}
+_SYNC_TREE_LAYERS = {"embed": 0, "w1": 1, "w2": 2, "head": 3}
+
+
+def _grad_sync_jit(order: str, mode: str = "hdot"):
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.overlap import grad_sync
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((4,), ("data",))
+    specs = {k: jax.ShapeDtypeStruct((n,), jnp.float32)
+             for k, n in _SYNC_TREE_SIZES.items()}
+    f = jax.jit(jax.shard_map(
+        functools.partial(grad_sync, axes="data", mode=mode, num_buckets=4,
+                          layers=_SYNC_TREE_LAYERS, order=order),
+        mesh=mesh, in_specs=(P(),), out_specs=P()))
+    return f, specs
+
+
+def _grad_sync_expected(order: str) -> List[int]:
+    """Per-leaf all-reduce element counts in emission order, from
+    make_buckets itself. A bucket is one multi-operand ``lax.psum``, but the
+    pre-opt HLO carries one all-reduce instruction per leaf (consecutive
+    channel ids), so the lint-level expectation is the flattened sequence."""
+    import numpy as np
+
+    from repro.core.overlap import make_buckets
+
+    tree = {k: np.zeros((n,), np.float32)
+            for k, n in _SYNC_TREE_SIZES.items()}
+    buckets = make_buckets(tree, 4, layers=_SYNC_TREE_LAYERS, order=order)
+    return [leaf.size for b in buckets for _, leaf in b]
+
+
+@target("grad_sync_1d")
+def _grad_sync_1d() -> Target:
+    """Explicit HDOT grad sync: per-bucket psums, reverse-topo emission."""
+    f, specs = _grad_sync_jit("reverse_topo")
+    expected = _grad_sync_expected("reverse_topo")
+    ctx = LintContext(target="grad_sync_1d", expected_permute_total=0,
+                      expected_ar_elements=expected,
+                      wire_dtype_elements={
+                          "f32": sum(_SYNC_TREE_SIZES.values())})
+    return Target("grad_sync_1d", _pre_opt_text(f, specs), ctx)
+
+
+# ------------------------------------------------------------ lm steps
+def _lm_trainer(parallel, mesh_shape, axes):
+    from repro.config.base import RunConfig, TrainConfig
+    from repro.config.registry import get_arch
+    from repro.launch.mesh import make_mesh
+    from repro.runtime.trainer import Trainer
+
+    cfg = get_arch("qwen3-8b").reduced()
+    train = TrainConfig(global_batch=8, seq_len=32, warmup_steps=2,
+                        total_steps=10, checkpoint_every=10**6,
+                        checkpoint_dir="/tmp/repro_lint_ckpt")
+    mesh = make_mesh(mesh_shape, axes)
+    return Trainer(RunConfig(cfg, parallel, train), mesh=mesh), mesh
+
+
+def _lm_specs(trainer):
+    import jax
+
+    from repro.optim import adamw_init
+
+    pspec = trainer.model.abstract_params()
+    ospec = jax.eval_shape(adamw_init, pspec)
+    batch = trainer._augment_frontend(trainer.data.batch_at(0))
+    bspec = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+             for k, v in batch.items()}
+    return pspec, ospec, bspec
+
+
+def _param_budget(pspec) -> Dict[str, int]:
+    import jax
+    import numpy as np
+
+    budget: Dict[str, int] = {}
+    for leaf in jax.tree.leaves(pspec):
+        dt = hlo_dtype(leaf.dtype)
+        budget[dt] = budget.get(dt, 0) + int(np.prod(leaf.shape))
+    return budget
+
+
+def _lm_hdot_target(name: str, mesh_shape, axes, overlap: str = "hdot"
+                    ) -> Target:
+    from repro.config.base import ParallelConfig
+
+    par = ParallelConfig(param_shard=False, remat="none", overlap=overlap)
+    trainer, _ = _lm_trainer(par, mesh_shape, axes)
+    jitted = trainer._build_step()
+    pspec, ospec, bspec = _lm_specs(trainer)
+    ctx = LintContext(target=name, expected_permute_total=0,
+                      wire_dtype_elements=_param_budget(pspec),
+                      expect_donation=True)
+    return Target(name, _pre_opt_text(jitted, pspec, ospec, bspec), ctx)
+
+
+@target("lm_hdot_1d")
+def _lm_hdot_1d() -> Target:
+    """lm train step, explicit HDOT bucketed grad sync, 4-way DP."""
+    return _lm_hdot_target("lm_hdot_1d", (4,), ("data",))
+
+
+@target("lm_hdot_2d")
+def _lm_hdot_2d() -> Target:
+    """lm train step, HDOT grad sync over a 2-D (pod x data) DP mesh."""
+    return _lm_hdot_target("lm_hdot_2d", (2, 2), ("pod", "data"))
+
+
+@target("lm_fsdp_1d")
+def _lm_fsdp_1d() -> Target:
+    """lm FSDP (ZeRO-3) step: one RS + one AG per bucket, reverse emission."""
+    import jax
+
+    from repro.config.base import ParallelConfig
+    from repro.launch.steps import fsdp_layout_for, make_fsdp_train_step
+    from repro.optim import adamw_init
+
+    par = ParallelConfig(param_shard=True, remat="none")
+    trainer, mesh = _lm_trainer(par, (4,), ("data",))
+    layout, _ = fsdp_layout_for(trainer.model, par, mesh)
+    step_fn = make_fsdp_train_step(trainer.model, par, mesh,
+                                   trainer.opt_cfg, layout=layout)
+    jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    n = layout.n_shards
+    # global flat buffers (the step's shard_map splits them over the DP axes)
+    pflat = {g.key: jax.ShapeDtypeStruct((g.padded,), g.dtype)
+             for g in layout.groups}
+    ospec = jax.eval_shape(adamw_init, pflat)
+    _, _, bspec = _lm_specs(trainer)
+    budget: Dict[str, int] = {}
+    for g in layout.groups:
+        dt = hlo_dtype(g.dtype)
+        budget[dt] = budget.get(dt, 0) + g.padded // n
+    ctx = LintContext(
+        target="lm_fsdp_1d", expected_permute_total=0,
+        expected_rs_elements=[g.padded // n for g in reversed(layout.groups)],
+        expected_ag_elements=[g.padded for g in layout.groups],
+        wire_dtype_elements=budget, expect_donation=True)
+    return Target("lm_fsdp_1d", _pre_opt_text(jitted, pflat, ospec, bspec),
+                  ctx)
+
+
+# ------------------------------------------------- mutation fixtures
+@broken("broken_unpeeled_halo1d")
+def _broken_unpeeled() -> Target:
+    """PR-3 regression: unpeeled drain — dead exchange + wrong pair count."""
+    steps = 2
+    jitted, spec = _halo_jit(1, steps, peel=False)
+    ctx = LintContext(target="broken_unpeeled_halo1d",
+                      expected_permute_total=PERMUTES_HALO(1, steps),
+                      expect_donation=True)
+    return Target("broken_unpeeled_halo1d", _pre_opt_text(jitted, spec), ctx)
+
+
+@broken("broken_no_donate_halo1d")
+def _broken_no_donate() -> Target:
+    """Donation dropped from the canonical halo jit."""
+    jitted, spec = _halo_jit(1, 2, peel=True, donate=False)
+    ctx = LintContext(target="broken_no_donate_halo1d",
+                      expected_permute_total=PERMUTES_HALO(1, 2),
+                      expect_donation=True)
+    return Target("broken_no_donate_halo1d", _pre_opt_text(jitted, spec), ctx)
+
+
+@broken("broken_tree_grad_sync")
+def _broken_tree_order() -> Target:
+    """Buckets emitted shallowest-first (order='tree') — wrong emission."""
+    f, specs = _grad_sync_jit("tree")
+    ctx = LintContext(target="broken_tree_grad_sync",
+                      expected_ar_elements=_grad_sync_expected("reverse_topo"))
+    return Target("broken_tree_grad_sync", _pre_opt_text(f, specs), ctx)
+
+
+@broken("broken_two_phase_grad_sync")
+def _broken_two_phase_sync() -> Target:
+    """Monolithic two-phase psum of a mixed-dtype tree: the concat upcasts
+    bf16 grads to f32 — full-width wire traffic (WIRE-WIDEN)."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.overlap import grad_sync
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((4,), ("data",))
+    specs = {"wq": jax.ShapeDtypeStruct((64, 8), jnp.bfloat16),
+             "norm": jax.ShapeDtypeStruct((64,), jnp.float32)}
+    f = jax.jit(jax.shard_map(
+        functools.partial(grad_sync, axes="data", mode="two_phase"),
+        mesh=mesh, in_specs=(P(),), out_specs=P()))
+    ctx = LintContext(target="broken_two_phase_grad_sync",
+                      wire_dtype_elements={"bf16": 64 * 8, "f32": 64})
+    return Target("broken_two_phase_grad_sync", _pre_opt_text(f, specs), ctx)
+
+
+@broken("broken_two_phase_heat2d")
+def _broken_two_phase_heat2d() -> Target:
+    """two_phase heat2d: exchange -> barrier -> compute, nothing overlaps."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.stencil import _heat2d_solver
+    from repro.launch.mesh import make_mesh
+
+    f = _heat2d_solver(make_mesh((4,), ("data",)), "data", 2, "two_phase", 4)
+    txt = _pre_opt_text(f, jax.ShapeDtypeStruct((32, 32), jnp.float32))
+    return Target("broken_two_phase_heat2d", txt,
+                  LintContext(target="broken_two_phase_heat2d"))
+
+
+@broken("broken_double_gather_fsdp")
+def _broken_double_gather() -> Target:
+    """fsdp_all_gather called twice per step: two AGs per bucket buffer."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.overlap import fsdp_all_gather, fsdp_layout
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((4,), ("data",))
+    tree = {"wq": jax.ShapeDtypeStruct((64, 8), jnp.float32),
+            "wk": jax.ShapeDtypeStruct((32, 8), jnp.float32)}
+    layout = fsdp_layout(tree, 4, num_buckets=2)
+
+    def local(flat):
+        a = fsdp_all_gather(flat, layout, ("data",))
+        b = fsdp_all_gather(flat, layout, ("data",))
+        return sum(jnp.sum(x) + jnp.sum(y)
+                   for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+    specs = {g.key: jax.ShapeDtypeStruct((g.padded,), g.dtype)
+             for g in layout.groups}
+    f = jax.jit(jax.shard_map(local, mesh=mesh,
+                              in_specs=(P("data"),), out_specs=P(),
+                              check_vma=False))
+    ctx = LintContext(
+        target="broken_double_gather_fsdp",
+        expected_ag_elements=[g.padded for g in layout.groups])
+    return Target("broken_double_gather_fsdp", _pre_opt_text(f, specs), ctx)

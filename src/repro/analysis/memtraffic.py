@@ -38,6 +38,31 @@ def _dtype_bytes(dt) -> float:
     return np.dtype(dt).itemsize
 
 
+def collective_wire_bytes(kind: str, result_bytes: float,
+                          group_size: int) -> float:
+    """Ring-model per-chip wire bytes for one collective, from its *result*
+    buffer size. Single source of truth for the dry-run HLO parser
+    (``analysis/hlo.py``) and the per-finding traffic annotation in
+    ``analysis/hlo_lint.py``:
+
+      all-gather         operand * (g-1) = result/g * (g-1)
+      reduce-scatter     result * (g-1)
+      all-reduce         2 * result * (g-1) / g
+      all-to-all         result * (g-1) / g
+      collective-permute result                       (point-to-point)
+    """
+    g = max(int(group_size), 1)
+    if kind == "all-gather":
+        return result_bytes / g * (g - 1)
+    if kind == "reduce-scatter":
+        return result_bytes * (g - 1)
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if kind == "all-to-all":
+        return result_bytes * (g - 1) / g
+    return float(result_bytes)  # collective-permute / unknown
+
+
 def sharded_bytes(specs: PyTree, axes: PyTree, ctx) -> float:
     """Per-chip bytes of a spec tree under the resolver's placements."""
     import jax

@@ -1,0 +1,32 @@
+"""Lint rule registry for the HLO schedule linter.
+
+Each rule encodes one HDOT overlap invariant as a check over the parsed HLO
+module (``analysis/hlo_ir.py``). Rules are pure: module + context in,
+structured findings out. Register new rules by appending to ``ALL_RULES``.
+"""
+from repro.analysis.rules.base import (Finding, LintContext, Rule, Severity,
+                                       annotate_wire_bytes)
+from repro.analysis.rules.buckets import (BucketOrderRule, DonationLostRule,
+                                          OneRsOneAgRule)
+from repro.analysis.rules.schedule import (DeadDrainRule, NoOverlapWindowRule,
+                                           PairCountRule)
+from repro.analysis.rules.wire import WireWidenRule
+
+ALL_RULES = (
+    DeadDrainRule(),
+    PairCountRule(),
+    BucketOrderRule(),
+    OneRsOneAgRule(),
+    WireWidenRule(),
+    NoOverlapWindowRule(),
+    DonationLostRule(),
+)
+
+RULES_BY_ID = {r.id: r for r in ALL_RULES}
+
+__all__ = [
+    "ALL_RULES", "RULES_BY_ID", "Finding", "LintContext", "Rule", "Severity",
+    "annotate_wire_bytes", "DeadDrainRule", "PairCountRule", "BucketOrderRule",
+    "OneRsOneAgRule", "WireWidenRule", "NoOverlapWindowRule",
+    "DonationLostRule",
+]

@@ -1,0 +1,129 @@
+"""Finding / context / rule base types for the HLO schedule linter."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.hlo_ir import HloInstruction, HloModule
+from repro.analysis.memtraffic import collective_wire_bytes
+
+
+class Severity:
+    ERROR = "error"      # schedule invariant broken — CI fails
+    WARNING = "warning"  # suspicious but not provably wrong
+    INFO = "info"        # annotation only (e.g. wire-bytes report)
+
+    ORDER = {ERROR: 0, WARNING: 1, INFO: 2}
+
+
+@dataclass
+class Finding:
+    """One structured lint finding: which rule, where, what, how to fix."""
+    rule: str
+    severity: str
+    message: str
+    fix_hint: str
+    op: str = ""                 # instruction name, e.g. collective-permute.24
+    computation: str = ""
+    line: int = 0                # 1-based line in the linted HLO text
+    wire_bytes: Optional[float] = None   # memtraffic ring-model annotation
+    snippet: str = ""
+
+    def to_dict(self) -> dict:
+        d = {
+            "rule": self.rule, "severity": self.severity,
+            "message": self.message, "fix_hint": self.fix_hint,
+            "op": self.op, "computation": self.computation, "line": self.line,
+        }
+        if self.wire_bytes is not None:
+            d["wire_bytes"] = round(self.wire_bytes, 1)
+        if self.snippet:
+            d["snippet"] = self.snippet
+        return d
+
+    def __str__(self) -> str:
+        loc = f"{self.computation}/{self.op}" if self.op else "<module>"
+        wire = (f" [{self.wire_bytes / 1e3:.1f} kB wire]"
+                if self.wire_bytes is not None else "")
+        return (f"{self.severity.upper():7s} {self.rule:18s} {loc}"
+                f" (line {self.line}){wire}\n"
+                f"        {self.message}\n        fix: {self.fix_hint}")
+
+
+@dataclass
+class LintContext:
+    """What the linted program is *supposed* to look like.
+
+    Populated by the canonical-target factory (``lint_targets.py``) from the
+    same schedule code the runtime uses — ``make_buckets`` / ``fsdp_layout``
+    for bucket expectations, mesh/steps for pair counts — so lint
+    expectations can never drift from the implementation.
+    """
+    target: str = ""
+    # PAIR-COUNT: expected collective-permutes per mesh axis (peeled HDOT
+    # schedule: 2 pairs/axis/step minus the peeled drain => 2*axes*steps).
+    expected_permutes: Optional[Dict[str, int]] = None
+    expected_permute_total: Optional[int] = None
+    # BUCKET-ORDER / ONE-RS-ONE-AG: per-(bucket x dtype) flat-buffer element
+    # counts in *emission* order, from FsdpLayout / make_buckets.
+    expected_rs_elements: Optional[List[int]] = None
+    expected_ag_elements: Optional[List[int]] = None
+    expected_ar_elements: Optional[List[int]] = None
+    # WIRE-WIDEN: param-spec element budget per wire dtype; any reduction
+    # collective moving more elements of dtype d than budget[d] (plus slack
+    # for bucket padding) is carrying upcast gradients.
+    wire_dtype_elements: Optional[Dict[str, int]] = None
+    wire_pad_slack: int = 0
+    # NO-OVERLAP-WINDOW: how many collectives are *allowed* zero overlap
+    # (the pipeline-fill exchange before the first interior chunk).
+    max_exposed_collectives: int = 0
+    # DONATION-LOST: the canonical jit wraps state with donate_argnums.
+    expect_donation: bool = False
+    # collectives with <= this many elements are bookkeeping (loss pmean,
+    # grad-norm scalars), skipped by traffic-oriented rules.
+    scalar_elements: int = 8
+    extra: Dict[str, object] = field(default_factory=dict)
+
+
+def annotate_wire_bytes(instr: HloInstruction) -> Optional[float]:
+    """memtraffic ring-model wire bytes for a collective instruction."""
+    kind = instr.collective_kind
+    if kind is None:
+        return None
+    return collective_wire_bytes(kind, instr.result_bytes(),
+                                 instr.replica_group_size)
+
+
+class Rule:
+    """Base class: subclasses set id/severity/fix_hint and implement check."""
+    id: str = ""
+    severity: str = Severity.ERROR
+    fix_hint: str = ""
+
+    def check(self, module: HloModule, ctx: LintContext) -> List[Finding]:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------- helpers
+    def finding(self, message: str, *, comp: str = "", op: str = "",
+                line: int = 0, wire_bytes: Optional[float] = None,
+                snippet: str = "", fix_hint: str = "",
+                severity: str = "") -> Finding:
+        return Finding(rule=self.id, severity=severity or self.severity,
+                       message=message, fix_hint=fix_hint or self.fix_hint,
+                       op=op, computation=comp, line=line,
+                       wire_bytes=wire_bytes, snippet=snippet)
+
+    def op_finding(self, message: str, comp, instr: HloInstruction,
+                   **kw) -> Finding:
+        return self.finding(message, comp=comp.name, op=instr.name,
+                            line=instr.line_no,
+                            wire_bytes=annotate_wire_bytes(instr),
+                            snippet=instr.raw[:160], **kw)
+
+
+def sized_collectives(module: HloModule, kinds: Sequence[str],
+                      ctx: LintContext
+                      ) -> List[Tuple[object, HloInstruction]]:
+    """Module collectives of the given kinds, scalar bookkeeping skipped."""
+    return [(c, i) for c, i in module.collectives(kinds)
+            if i.elements() > ctx.scalar_elements]

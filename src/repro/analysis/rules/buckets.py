@@ -1,0 +1,130 @@
+"""Grad-sync bucket rules: BUCKET-ORDER, ONE-RS-ONE-AG, DONATION-LOST.
+
+Expectations come from the *same* code the runtime uses — ``make_buckets`` /
+``fsdp_layout`` element counts, fed in through :class:`LintContext` — so the
+lint can never drift from the implementation. The rules then check the
+lowered module against them:
+
+* exactly one reduce-scatter and one all-gather per (bucket x dtype) flat
+  buffer (no retrace duplicated a collective, no buffer was split),
+* reduce-scatters emitted in reverse-topological order (last backward bucket
+  first — its gradient is ready first) and all-gathers forward (first
+  forward-pass bucket first). Channel ids are assigned in trace order by
+  jax, so emission order IS channel-id order in the pre-opt dump.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import List, Optional, Sequence, Tuple
+
+from repro.analysis.hlo_ir import HloInstruction, HloModule
+from repro.analysis.rules.base import (Finding, LintContext, Rule,
+                                       sized_collectives)
+
+
+def _by_channel(ops: Sequence[Tuple[object, HloInstruction]]
+                ) -> List[Tuple[object, HloInstruction]]:
+    return sorted(ops, key=lambda ci: (ci[1].channel_id or 0,
+                                       ci[1].line_no))
+
+
+class OneRsOneAgRule(Rule):
+    """Each FSDP (bucket x dtype) buffer crosses the wire exactly once per
+    direction: one reduce-scatter for its gradient, one all-gather for its
+    params. A duplicate means a retrace emitted the collective twice (2x
+    wire traffic); a missing one means a bucket silently fell out of sync.
+    Compared as multisets of flat-buffer element counts.
+    """
+    id = "ONE-RS-ONE-AG"
+    fix_hint = ("one flat buffer per (bucket, dtype): check FsdpLayout "
+                "grouping and that grad_sync_fsdp / fsdp_all_gather are "
+                "called once per buffer per step")
+
+    def _diff(self, module, ops, expected: Optional[List[int]],
+              kind: str) -> List[Finding]:
+        if expected is None:
+            return []
+        got = Counter(i.elements() for _, i in ops)
+        want = Counter(expected)
+        out: List[Finding] = []
+        for size in sorted(got - want):
+            comp, instr = next((c, i) for c, i in ops
+                               if i.elements() == size)
+            out.append(self.op_finding(
+                f"surplus {kind} for a {size}-element buffer: "
+                f"{got[size]} found, {want[size]} expected", comp, instr))
+        for size in sorted(want - got):
+            out.append(self.finding(
+                f"missing {kind} for a {size}-element buffer "
+                f"({want[size]} expected, {got[size]} found)"))
+        return out
+
+    def check(self, module: HloModule, ctx: LintContext) -> List[Finding]:
+        rs = sized_collectives(module, ["reduce-scatter"], ctx)
+        ag = sized_collectives(module, ["all-gather"], ctx)
+        return (self._diff(module, rs, ctx.expected_rs_elements,
+                           "reduce-scatter")
+                + self._diff(module, ag, ctx.expected_ag_elements,
+                             "all-gather"))
+
+
+class BucketOrderRule(Rule):
+    """Bucket collectives must be emitted in schedule order: reduce-scatters
+    (and plain-DP all-reduces) reverse-topological — the last backward
+    bucket's gradient is complete first, so its collective must launch first
+    to overlap with the rest of the backward pass — and all-gathers forward,
+    matching forward-pass consumption order. Emission order is read off
+    channel ids (jax assigns them in trace order).
+
+    This is the rule a ``make_buckets(order='tree')`` regression trips.
+    """
+    id = "BUCKET-ORDER"
+    fix_hint = ("emit grad collectives in reverse-topological bucket order "
+                "(make_buckets(..., order='reverse_topo')); all-gathers in "
+                "forward order")
+
+    def _check_seq(self, ops, expected: Optional[List[int]],
+                   kind: str) -> List[Finding]:
+        if expected is None:
+            return []
+        ordered = _by_channel(ops)
+        got = [i.elements() for _, i in ordered]
+        if sorted(got) != sorted(expected):
+            return []  # wrong population — ONE-RS-ONE-AG owns that report
+        if got == expected:
+            return []
+        comp, instr = ordered[0]
+        return [self.op_finding(
+            f"{kind} emission order {got} does not match schedule order "
+            f"{expected} (channel-id order = trace order)", comp, instr)]
+
+    def check(self, module: HloModule, ctx: LintContext) -> List[Finding]:
+        rs = sized_collectives(module, ["reduce-scatter"], ctx)
+        ag = sized_collectives(module, ["all-gather"], ctx)
+        ar = sized_collectives(module, ["all-reduce"], ctx)
+        out = self._check_seq(rs, ctx.expected_rs_elements, "reduce-scatter")
+        out += self._check_seq(ag, ctx.expected_ag_elements, "all-gather")
+        out += self._check_seq(ar, ctx.expected_ar_elements, "all-reduce")
+        return out
+
+
+class DonationLostRule(Rule):
+    """The canonical train/solver steps donate their state buffers
+    (``donate_argnums``); if the lowered module carries neither an
+    ``input_output_alias`` nor a ``buffer_donor`` header entry, donation was
+    silently dropped (a wrapper re-captured the arg, or a non-jit path) and
+    peak memory doubles on the donated tree.
+    """
+    id = "DONATION-LOST"
+    fix_hint = ("pass state positionally through jax.jit(donate_argnums=...) "
+                "with no intervening closure capture; check the wrapper "
+                "did not rebuild the pytree outside the jit boundary")
+
+    def check(self, module: HloModule, ctx: LintContext) -> List[Finding]:
+        if not ctx.expect_donation:
+            return []
+        if module.n_aliased or module.n_donors:
+            return []
+        return [self.finding(
+            "module expects donated state but header has no "
+            "input_output_alias / buffer_donor entries — donation lost")]

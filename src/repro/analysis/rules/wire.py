@@ -1,0 +1,70 @@
+"""WIRE-WIDEN: gradients crossing the wire wider than the param spec.
+
+XLA upcasts bf16 accumulation to f32, and a naive grad sync (two_phase's
+single concatenated psum) inherits that width: every bf16 gradient crosses
+the interconnect as f32 — 2x the bytes for zero fidelity the optimizer can
+use (it re-rounds to the param dtype on update). The HDOT per-dtype buckets
+keep bf16 grads on a bf16 wire; ``optim/compression.py`` provides the
+sanctioned narrowing path (bf16 / fp8 wire codecs with error-feedback) when
+even that is too wide.
+
+The rule compares, per wire dtype, the total elements moved by reduction
+collectives (all-reduce / reduce-scatter, the grad-sync ops) against the
+param spec's element budget for that dtype. Elements of a dtype the spec
+does not contain — beyond padding slack — are upcast traffic.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List
+
+from repro.analysis.hlo_ir import DTYPE_BYTES, HloModule
+from repro.analysis.rules.base import (Finding, LintContext, Rule,
+                                       annotate_wire_bytes,
+                                       sized_collectives)
+
+
+class WireWidenRule(Rule):
+    """Reduction collectives moving more elements of a dtype than the param
+    spec budgets for it are carrying upcast gradients (see module docstring:
+    the two_phase concatenated psum inherits the f32 accumulator width).
+    """
+    id = "WIRE-WIDEN"
+    fix_hint = ("sync grads per dtype (HDOT buckets keep bf16 grads on a "
+                "bf16 wire); for narrower transport use the error-feedback "
+                "wire codecs in optim/compression.py (bf16/fp8/int8)")
+
+    def check(self, module: HloModule, ctx: LintContext) -> List[Finding]:
+        budget = ctx.wire_dtype_elements
+        if budget is None:
+            return []
+        moved: Dict[str, int] = defaultdict(int)
+        anchors = {}
+        wire: Dict[str, float] = defaultdict(float)
+        for comp, instr in sized_collectives(
+                module, ["all-reduce", "reduce-scatter"], ctx):
+            for part, (dt, _) in enumerate(instr.shapes):
+                n = instr.elements(part)
+                moved[dt] += n
+                wire[dt] += (annotate_wire_bytes(instr) or 0.0)
+                prev = anchors.get(dt)
+                if prev is None or n > prev[1].elements():
+                    anchors[dt] = (comp, instr)
+        out: List[Finding] = []
+        for dt, n in sorted(moved.items()):
+            allowed = budget.get(dt, 0) + ctx.wire_pad_slack
+            if n <= allowed:
+                continue
+            comp, instr = anchors[dt]
+            widths = {d: DTYPE_BYTES.get(d, 0) for d in budget}
+            narrower = [d for d, w in widths.items()
+                        if w < DTYPE_BYTES.get(dt, 0) and budget[d] > 0]
+            hint_dt = (f" (param spec holds {sorted(budget.items())}; "
+                       f"likely upcast from {'/'.join(sorted(narrower))})"
+                       if narrower else "")
+            out.append(self.op_finding(
+                f"reduction collectives move {n} {dt} elements but the "
+                f"param spec budgets {allowed} — gradients are crossing "
+                f"the wire widened{hint_dt}", comp, instr,
+                severity=self.severity))
+        return out

@@ -109,7 +109,11 @@ def matmul_rs_hdot(h: jax.Array, v: jax.Array, axis_name: str,
         return h @ v
     idx = lax.axis_index(axis_name)
     s = h.shape[0]
-    assert s % n == 0, (s, n)
+    if s % n != 0:
+        raise ValueError(
+            f"gathered dim {s} must divide evenly over the {n} devices of "
+            f"axis {axis_name!r} for the ring schedule (got remainder "
+            f"{s % n})")
     s_loc = s // n
     fwd, bwd = _ring_perms(n)
 

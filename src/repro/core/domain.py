@@ -58,7 +58,8 @@ class Box:
 def _split_extent(extent: int, parts: int) -> List[Tuple[int, int]]:
     """Split [0, extent) into `parts` contiguous ranges, remainder spread over
     the leading parts (the classic MPI block distribution)."""
-    assert parts >= 1
+    if parts < 1:
+        raise ValueError(f"cannot split extent {extent} into {parts} parts")
     base, rem = divmod(extent, parts)
     out = []
     cur = 0
@@ -76,7 +77,11 @@ def decompose_grid(shape: Sequence[int], parts: Sequence[int]) -> List[Box]:
     Splits an N-d index space of `shape` into a grid of `parts[i]` blocks per
     dimension, row-major order. Every cell belongs to exactly one box.
     """
-    assert len(shape) == len(parts)
+    if len(shape) != len(parts):
+        raise ValueError(
+            f"shape {tuple(shape)} is {len(shape)}-d but parts "
+            f"{tuple(parts)} names {len(parts)} dims — one block count per "
+            f"dim required")
     per_dim = [_split_extent(e, p) for e, p in zip(shape, parts)]
 
     boxes: List[Box] = []

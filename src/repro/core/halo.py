@@ -144,7 +144,11 @@ def _norm_subn(subdomains, n: int) -> Tuple[int, ...]:
     if isinstance(subdomains, int):
         return (subdomains,) * n
     t = tuple(subdomains)
-    assert len(t) == n, (subdomains, n)
+    if len(t) != n:
+        raise ValueError(
+            f"subdomains={subdomains!r} has {len(t)} entries but the "
+            f"decomposition is {n}-dimensional; pass an int or one chunk "
+            f"count per dim")
     return t
 
 

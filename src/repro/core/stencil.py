@@ -407,7 +407,11 @@ def _hpccg_solver(mesh, axis_name, iters: int, mode: str, subdomains: int):
         # trailing grid dims carry the mesh: (y, z) for a pair, (x, y, z)
         # for a full 3-D mesh
         cdims = tuple(range(3 - len(axes), 3))
-        assert 2 <= len(axes) <= 3, axis_name
+        if not 2 <= len(axes) <= 3:
+            raise ValueError(
+                f"hpccg chained decomposition takes 2 or 3 mesh axes, got "
+                f"{len(axes)}: {axis_name!r} (pass a single axis name for "
+                f"1-D)")
 
     def matvec(p, halos):
         if chained:

@@ -34,8 +34,10 @@ def attention_specs(cfg: ModelConfig, dtype=jnp.bfloat16) -> Dict[str, ParamSpec
     hd = cfg.resolved_head_dim
     s: Dict[str, ParamSpec] = {
         "wq": ParamSpec((cfg.d_model, cfg.num_heads, hd), ("embed", "heads", "head_dim"), dtype),
-        "wk": ParamSpec((cfg.d_model, cfg.num_kv_heads, hd), ("embed", "kv_heads", "head_dim"), dtype),
-        "wv": ParamSpec((cfg.d_model, cfg.num_kv_heads, hd), ("embed", "kv_heads", "head_dim"), dtype),
+        "wk": ParamSpec((cfg.d_model, cfg.num_kv_heads, hd),
+                        ("embed", "kv_heads", "head_dim"), dtype),
+        "wv": ParamSpec((cfg.d_model, cfg.num_kv_heads, hd),
+                        ("embed", "kv_heads", "head_dim"), dtype),
         "wo": ParamSpec((cfg.num_heads, hd, cfg.d_model), ("heads", "head_dim", "embed"), dtype),
     }
     if cfg.qk_norm:

@@ -1,13 +1,21 @@
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.optim.schedule import warmup_cosine
-from repro.optim.compression import int8_compress, int8_decompress, ef_compress_update
+from repro.optim.compression import (bf16_compress, bf16_decompress,
+                                     ef_compress_update, fp8_compress,
+                                     fp8_decompress, int8_compress,
+                                     int8_decompress, wire_codec)
 
 __all__ = [
     "AdamWConfig",
     "adamw_init",
     "adamw_update",
     "warmup_cosine",
+    "bf16_compress",
+    "bf16_decompress",
+    "fp8_compress",
+    "fp8_decompress",
     "int8_compress",
     "int8_decompress",
     "ef_compress_update",
+    "wire_codec",
 ]

@@ -27,7 +27,13 @@ def reassign_host_shards(num_hosts: int, failed: Sequence[int]
     materialize ANY slice from the step index alone, data/pipeline.py).
 
     Returns {surviving_host: [host_slice_ids it now serves]}."""
+    if num_hosts < 1:
+        raise ValueError(f"num_hosts must be >= 1, got {num_hosts}")
     failed_set = set(failed)
+    bad = sorted(h for h in failed_set if not 0 <= h < num_hosts)
+    if bad:
+        raise ValueError(
+            f"failed host ids {bad} out of range for num_hosts={num_hosts}")
     survivors = [h for h in range(num_hosts) if h not in failed_set]
     if not survivors:
         raise RuntimeError("no surviving hosts")
@@ -40,6 +46,8 @@ def reassign_host_shards(num_hosts: int, failed: Sequence[int]
 class FaultTolerantRunner:
     def __init__(self, trainer_factory: Callable[[], Trainer],
                  max_restarts: int = 3):
+        if max_restarts < 0:
+            raise ValueError(f"max_restarts must be >= 0, got {max_restarts}")
         self.trainer_factory = trainer_factory
         self.max_restarts = max_restarts
         self.restarts = 0

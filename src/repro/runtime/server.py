@@ -32,6 +32,10 @@ class Request:
 class BatchServer:
     def __init__(self, model: LanguageModel, params: PyTree, slots: int = 8,
                  max_len: int = 1024, greedy: bool = True, seed: int = 0):
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        if max_len < 1:
+            raise ValueError(f"max_len must be >= 1, got {max_len}")
         self.model = model
         self.params = params
         self.slots = slots
@@ -46,6 +50,18 @@ class BatchServer:
         self._decode = jax.jit(model.decode_step)
 
     def submit(self, req: Request) -> None:
+        if not req.prompt:
+            raise ValueError("empty prompt: nothing to prefill")
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {req.max_new_tokens}")
+        need = len(req.prompt) + req.max_new_tokens
+        if need > self.max_len:
+            raise ValueError(
+                f"prompt ({len(req.prompt)} tokens) + max_new_tokens "
+                f"({req.max_new_tokens}) = {need} exceeds the server's "
+                f"cache capacity max_len={self.max_len}; generated tokens "
+                f"would evict the prompt from the ring cache")
         self.queue.append(req)
 
     def _pad_prompts(self, reqs: List[Request]) -> np.ndarray:

@@ -1,0 +1,302 @@
+"""HLO schedule linter: parser + rule engine on synthetic HLO text (fast),
+plus subprocess mutation tests that lower the BROKEN lint targets on real
+forced-device meshes and assert each schedule regression trips exactly its
+rule. The canonical-target PASS assertions live in test_system.py next to
+the behaviours they guard."""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.analysis.hlo_ir import (is_compute, parse_hlo_module,
+                                   reaches_live_compute)
+from repro.analysis.hlo_lint import lint_text
+from repro.analysis.rules import ALL_RULES, RULES_BY_ID, LintContext
+
+from tests.test_system import run_devices
+
+
+def _module(body: str, header_attrs: str = "") -> str:
+    head = "HloModule synthetic" + (", " + header_attrs if header_attrs else "")
+    return head + "\n\nENTRY main {\n" + body + "\n}\n"
+
+
+def _rules(report):
+    return sorted({f.rule for f in report.findings})
+
+
+# ------------------------------------------------------------------ parser
+def test_parser_instructions_channels_and_root():
+    txt = _module("""\
+  p0 = f32[16] parameter(0)
+  cp = f32[16] collective-permute(p0), channel_id=3, source_target_pairs={{0,1},{1,0}}
+  m = f32[16] multiply(p0, p0)
+  ROOT r = f32[16] add(m, cp)""")
+    mod = parse_hlo_module(txt)
+    assert mod.entry is not None and mod.entry.name == "main"
+    ops = mod.entry.by_name
+    assert set(ops) == {"p0", "cp", "m", "r"}
+    assert ops["cp"].channel_id == 3
+    assert ops["cp"].source_target_pairs == ((0, 1), (1, 0))
+    assert ops["r"].is_root and not ops["m"].is_root
+    assert ops["cp"].elements() == 16
+    assert ops["r"].operands == ("m", "cp")
+    assert is_compute(mod, ops["m"]) and not is_compute(mod, ops["cp"])
+
+
+def test_parser_strips_position_comments():
+    # HLO interleaves /*index=N*/ comments into long operand lists; the
+    # parser must still see the instruction (this broke call-site parsing
+    # for >=6-element tuples before the comment strip)
+    txt = _module("""\
+  p0 = f32[16] parameter(0)
+  t = (f32[16], /*index=1*/f32[16]) tuple(p0, /*index=1*/p0)
+  ROOT g = f32[16] get-tuple-element(t), index=1""")
+    mod = parse_hlo_module(txt)
+    assert set(mod.entry.by_name) == {"p0", "t", "g"}
+    assert mod.entry.by_name["g"].tuple_index == 1
+
+
+def test_taint_follows_call_and_tuple_elements():
+    # value rides a call's result tuple: element 0 reaches compute at the
+    # call site, element 1 is dropped — only the first permute is live
+    txt = """HloModule taint
+
+callee {
+  cp.1 = f32[16] parameter(0)
+  cp.2 = f32[16] parameter(1)
+  ROOT out = (f32[16], f32[16]) tuple(cp.1, cp.2)
+}
+
+ENTRY main {
+  p0 = f32[16] parameter(0)
+  live = f32[16] collective-permute(p0), channel_id=1, source_target_pairs={{0,1},{1,0}}
+  dead = f32[16] collective-permute(p0), channel_id=2, source_target_pairs={{0,1},{1,0}}
+  c = (f32[16], f32[16]) call(live, dead), to_apply=callee
+  keep = f32[16] get-tuple-element(c), index=0
+  ROOT r = f32[16] add(keep, keep)
+}
+"""
+    mod = parse_hlo_module(txt)
+    comp = mod.entry
+    assert reaches_live_compute(mod, comp, comp.by_name["live"])
+    assert not reaches_live_compute(mod, comp, comp.by_name["dead"])
+
+
+# ------------------------------------------------------------------- rules
+def test_registry_is_complete():
+    ids = [r.id for r in ALL_RULES]
+    assert len(ids) == len(set(ids)) == 7
+    assert set(RULES_BY_ID) == set(ids)
+    for r in ALL_RULES:
+        assert r.fix_hint and (r.__doc__ or "").strip()
+
+
+def test_dead_drain_fires_on_unconsumed_permute():
+    txt = _module("""\
+  p0 = f32[16] parameter(0)
+  drain = f32[16] collective-permute(p0), channel_id=1, source_target_pairs={{0,1},{1,0}}
+  ROOT r = f32[16] add(p0, p0)""")
+    rep = lint_text(txt, LintContext(), target="synthetic")
+    assert "DEAD-DRAIN" in _rules(rep) and not rep.ok
+    # consumed by compute: clean
+    txt = _module("""\
+  p0 = f32[16] parameter(0)
+  cp = f32[16] collective-permute(p0), channel_id=1, source_target_pairs={{0,1},{1,0}}
+  ROOT r = f32[16] add(cp, p0)""")
+    assert "DEAD-DRAIN" not in _rules(lint_text(txt, LintContext()))
+
+
+def test_pair_count_total_and_balance():
+    ring = "source_target_pairs={{0,1},{1,2},{2,3},{3,0}}"
+    rev = "source_target_pairs={{1,0},{2,1},{3,2},{0,3}}"
+    body = f"""\
+  p0 = f32[16] parameter(0)
+  p1 = f32[16] parameter(1)
+  fwd = f32[16] collective-permute(p0), channel_id=1, {ring}
+  bwd = f32[16] collective-permute(p0), channel_id=2, {rev}
+  interior = f32[16] multiply(p1, p1)
+  s = f32[16] add(fwd, bwd)
+  ROOT r = f32[16] add(s, interior)"""
+    ok = lint_text(_module(body),
+                   LintContext(expected_permute_total=2))
+    assert ok.ok, ok.render()
+    wrong_total = lint_text(_module(body),
+                            LintContext(expected_permute_total=4))
+    assert "PAIR-COUNT" in _rules(wrong_total)
+    # a forward shift without its reverse is a lost halo
+    unbalanced = _module(f"""\
+  p0 = f32[16] parameter(0)
+  fwd = f32[16] collective-permute(p0), channel_id=1, {ring}
+  ROOT r = f32[16] add(fwd, p0)""")
+    rep = lint_text(unbalanced, LintContext(expected_permute_total=1))
+    assert "PAIR-COUNT" in _rules(rep)
+    assert any("reverse" in f.message for f in rep.findings)
+
+
+def test_bucket_order_reads_channel_ids():
+    body = """\
+  p0 = f32[23] parameter(0)
+  p1 = f32[11] parameter(1)
+  ar1 = f32[11] all-reduce(p1), channel_id=1, to_apply=add_f32
+  ar2 = f32[23] all-reduce(p0), channel_id=2, to_apply=add_f32
+  ROOT t = (f32[11], f32[23]) tuple(ar1, ar2)"""
+    good = lint_text(_module(body),
+                     LintContext(expected_ar_elements=[11, 23]))
+    assert "BUCKET-ORDER" not in _rules(good)
+    bad = lint_text(_module(body),
+                    LintContext(expected_ar_elements=[23, 11]))
+    assert "BUCKET-ORDER" in _rules(bad)
+
+
+def test_one_rs_one_ag_multiset():
+    body = """\
+  p0 = f32[32] parameter(0)
+  ag1 = f32[32] all-gather(p0), channel_id=1, dimensions={0}
+  ag2 = f32[32] all-gather(p0), channel_id=2, dimensions={0}
+  ROOT t = (f32[32], f32[32]) tuple(ag1, ag2)"""
+    dup = lint_text(_module(body),
+                    LintContext(expected_ag_elements=[32]))
+    assert "ONE-RS-ONE-AG" in _rules(dup)
+    assert any("surplus" in f.message for f in dup.findings)
+    missing = lint_text(_module(body),
+                        LintContext(expected_ag_elements=[32, 32, 64]))
+    assert any("missing" in f.message for f in missing.findings)
+    exact = lint_text(_module(body),
+                      LintContext(expected_ag_elements=[32, 32]))
+    assert "ONE-RS-ONE-AG" not in _rules(exact)
+
+
+def test_wire_widen_compares_dtype_budgets():
+    body = """\
+  p0 = f32[100] parameter(0)
+  ar = f32[100] all-reduce(p0), channel_id=1, to_apply=add_f32
+  ROOT r = f32[100] add(ar, p0)"""
+    widened = lint_text(_module(body),
+                        LintContext(wire_dtype_elements={"bf16": 100}))
+    assert "WIRE-WIDEN" in _rules(widened)
+    assert any("bf16" in f.message for f in widened.findings)
+    at_width = lint_text(_module(body),
+                         LintContext(wire_dtype_elements={"f32": 100}))
+    assert "WIRE-WIDEN" not in _rules(at_width)
+
+
+def test_no_overlap_window_needs_independent_compute():
+    serial = _module("""\
+  p0 = f32[16] parameter(0)
+  cp = f32[16] collective-permute(p0), channel_id=1, source_target_pairs={{0,1},{1,0}}
+  ROOT r = f32[16] add(cp, p0)""")
+    rep = lint_text(serial, LintContext())
+    assert "NO-OVERLAP-WINDOW" in _rules(rep)
+    overlapped = _module("""\
+  p0 = f32[16] parameter(0)
+  p1 = f32[16] parameter(1)
+  cp = f32[16] collective-permute(p0), channel_id=1, source_target_pairs={{0,1},{1,0}}
+  interior = f32[16] multiply(p1, p1)
+  boundary = f32[16] add(cp, p0)
+  ROOT r = f32[16] add(boundary, interior)""")
+    assert "NO-OVERLAP-WINDOW" not in _rules(lint_text(overlapped,
+                                                       LintContext()))
+    # a pure-communication module (no compute at all) is not lintable for
+    # overlap: nothing could ever hide the latency, rule stays silent
+    comm_only = _module("""\
+  p0 = f32[16] parameter(0)
+  ar = f32[16] all-reduce(p0), channel_id=1, to_apply=add_f32
+  ROOT r = f32[16] reshape(ar)""")
+    assert "NO-OVERLAP-WINDOW" not in _rules(lint_text(comm_only,
+                                                       LintContext()))
+
+
+def test_donation_lost_reads_module_header():
+    body = """\
+  p0 = f32[16] parameter(0)
+  ROOT r = f32[16] add(p0, p0)"""
+    lost = lint_text(_module(body), LintContext(expect_donation=True))
+    assert "DONATION-LOST" in _rules(lost)
+    donated = lint_text(_module(body, "buffer_donor={ (0, {}) }"),
+                        LintContext(expect_donation=True))
+    assert "DONATION-LOST" not in _rules(donated)
+    aliased = lint_text(
+        _module(body, "input_output_alias={ {}: (0, {}, may-alias) }"),
+        LintContext(expect_donation=True))
+    assert "DONATION-LOST" not in _rules(aliased)
+
+
+# ------------------------------------------------------------------ report
+def test_report_shape_and_wire_annotation():
+    txt = _module("""\
+  p0 = f32[16] parameter(0)
+  cp = f32[16] collective-permute(p0), channel_id=1, source_target_pairs={{0,1},{1,0}}
+  ROOT r = f32[16] add(cp, p0)""")
+    rep = lint_text(txt, LintContext(expected_permute_total=1),
+                    target="fixture")
+    assert rep.target == "fixture" and rep.n_collectives == 1
+    assert rep.wire_bytes == pytest.approx(64.0)   # CP moves its payload once
+    d = rep.to_dict()
+    assert set(d) >= {"target", "ok", "n_collectives", "wire_bytes",
+                      "findings"}
+    assert json.dumps(d)                            # JSON-serializable
+    assert rep.render().startswith("FAIL" if not rep.ok else "PASS")
+    for f in rep.findings:
+        fd = f.to_dict()
+        assert {"rule", "severity", "message", "fix_hint"} <= set(fd)
+
+
+# --------------------------------------------------- mutation fixtures (slow)
+@pytest.mark.slow
+def test_two_phase_mutations_trip_wire_and_overlap_rules():
+    """two_phase is the sanctioned negative for both wire rules: the
+    monolithic concatenated psum upcasts bf16 grads to the f32 accumulator
+    dtype (WIRE-WIDEN), and the exchange->barrier->compute stencil leaves
+    the collectives zero independent compute (NO-OVERLAP-WINDOW)."""
+    code = """
+    import json
+    from repro.analysis.hlo_lint import lint_target
+    wide = lint_target("broken_two_phase_grad_sync")
+    barrier = lint_target("broken_two_phase_heat2d")
+    clean = lint_target("heat2d_1d")
+    print(json.dumps({
+        "upcast_caught": "WIRE-WIDEN" in {f.rule for f in wide.errors},
+        "barrier_caught":
+            "NO-OVERLAP-WINDOW" in {f.rule for f in barrier.errors},
+        "hdot_clean": clean.ok,
+    }))
+    """
+    r = run_devices(code, 4)
+    assert all(r.values()), r
+
+
+@pytest.mark.slow
+def test_cli_json_artifact_and_exit_codes(tmp_path):
+    """`python -m repro.analysis.hlo_lint` is the CI entry point: exit 0 and
+    a machine-readable JSON report for clean targets, exit 1 when a target
+    carries an error finding."""
+    import os
+    import subprocess
+    import sys
+
+    from tests.test_system import REPO
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("XLA_FLAGS", None)   # the CLI forces its own device count
+    out_json = tmp_path / "lint.json"
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.hlo_lint",
+         "-t", "halo1d,heat2d_1d", "--devices", "4",
+         "--json", str(out_json)],
+        capture_output=True, text=True, timeout=600, env=env)
+    assert res.returncode == 0, res.stdout + res.stderr
+    payload = json.loads(out_json.read_text())
+    assert payload["ok"] is True
+    assert [t["target"] for t in payload["targets"]] == ["halo1d",
+                                                         "heat2d_1d"]
+    assert all(t["n_collectives"] > 0 for t in payload["targets"])
+
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.hlo_lint",
+         "-t", "broken_unpeeled_halo1d", "--devices", "4"],
+        capture_output=True, text=True, timeout=600, env=env)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "DEAD-DRAIN" in res.stdout

@@ -1,0 +1,96 @@
+"""analysis/memtraffic: ring-model collective wire bytes (the linter's
+per-finding annotation) and the analytic per-chip HBM traffic model."""
+from __future__ import annotations
+
+import pytest
+
+from repro.analysis.memtraffic import (activation_traffic_per_layer,
+                                       collective_wire_bytes,
+                                       flash_kv_traffic, hbm_traffic)
+from repro.config.base import ModelConfig
+from repro.config.shapes import ShapeConfig
+
+
+# ---------------------------------------------------- collective wire bytes
+def test_ring_model_closed_forms():
+    R, g = 1024.0, 8
+    assert collective_wire_bytes("all-gather", R, g) == R / g * (g - 1)
+    assert collective_wire_bytes("reduce-scatter", R, g) == R * (g - 1)
+    assert collective_wire_bytes("all-reduce", R, g) == 2 * R * (g - 1) / g
+    assert collective_wire_bytes("all-to-all", R, g) == R * (g - 1) / g
+    assert collective_wire_bytes("collective-permute", R, g) == R
+
+
+def test_allreduce_equals_rs_plus_ag_of_shards():
+    # ring AR = ring RS + ring AG over the same g shards; with result size R,
+    # the RS leg's result is one R/g shard and the AG leg rebuilds R from it
+    R, g = 4096.0, 16
+    rs = collective_wire_bytes("reduce-scatter", R / g, g)
+    ag = collective_wire_bytes("all-gather", R, g)
+    assert collective_wire_bytes("all-reduce", R, g) == pytest.approx(rs + ag)
+
+
+def test_single_participant_moves_nothing_but_permute_still_pays():
+    # g=1: every ring collective is a no-op on the wire; a permute is a
+    # point-to-point send of its payload regardless of group bookkeeping
+    for kind in ("all-gather", "reduce-scatter", "all-reduce", "all-to-all"):
+        assert collective_wire_bytes(kind, 512.0, 1) == 0.0
+    assert collective_wire_bytes("collective-permute", 512.0, 1) == 512.0
+
+
+def test_group_size_clamped_and_unknown_kind_passthrough():
+    assert collective_wire_bytes("all-reduce", 100.0, 0) == 0.0
+    assert collective_wire_bytes("frob-exchange", 100.0, 8) == 100.0
+
+
+# ------------------------------------------------------------- HBM traffic
+def _tiny_cfg(**kw) -> ModelConfig:
+    kw.setdefault("name", "tiny")
+    kw.setdefault("family", "dense")
+    kw.setdefault("num_layers", 2)
+    kw.setdefault("d_model", 64)
+    kw.setdefault("num_heads", 4)
+    kw.setdefault("num_kv_heads", 4)
+    kw.setdefault("d_ff", 256)
+    kw.setdefault("vocab_size", 1000)
+    return ModelConfig(**kw)
+
+
+def test_activation_traffic_scales_with_tokens_and_passes():
+    cfg = _tiny_cfg()
+    one = activation_traffic_per_layer(cfg, tokens_global=1024, chips=4,
+                                       passes=1.0)
+    assert one > 0
+    # linear in tokens-per-chip and in passes
+    assert activation_traffic_per_layer(cfg, 2048, 4, 1.0) == 2 * one
+    assert activation_traffic_per_layer(cfg, 1024, 8, 1.0) == one / 2
+    assert activation_traffic_per_layer(cfg, 1024, 4, 2.0) == 2 * one
+
+
+def test_flash_kv_traffic_zero_for_ssm_and_windowed():
+    shape = ShapeConfig("t", seq_len=8192, global_batch=4, kind="train")
+    ssm = _tiny_cfg(family="ssm")
+    assert flash_kv_traffic(ssm, shape, chips=4) == 0.0
+    full = flash_kv_traffic(_tiny_cfg(), shape, chips=4)
+    swa = flash_kv_traffic(_tiny_cfg(sliding_window=1024), shape, chips=4)
+    assert 0.0 < swa < full  # a window re-reads fewer K,V bytes
+
+
+def test_hbm_traffic_train_counts_every_stream():
+    cfg = _tiny_cfg()
+    shape = ShapeConfig("t", seq_len=1024, global_batch=8, kind="train")
+    P, M = 1e6, 2e6
+    total = hbm_traffic(cfg, shape, chips=4, param_bytes_chip=P,
+                        moment_bytes_chip=M)
+    # weights 3P + grads 2P + optimizer (4M + 2P) is the remat floor
+    assert total > 7 * P + 4 * M
+    no_remat = hbm_traffic(cfg, shape, chips=4, param_bytes_chip=P,
+                           moment_bytes_chip=M, remat=False)
+    assert total - no_remat == pytest.approx(P)  # remat = one extra read
+
+
+def test_hbm_traffic_decode_is_params_plus_cache():
+    cfg = _tiny_cfg()
+    shape = ShapeConfig("d", seq_len=1024, global_batch=8, kind="decode")
+    assert hbm_traffic(cfg, shape, chips=4, param_bytes_chip=5.0,
+                       cache_bytes_chip=7.0) == 12.0

@@ -9,8 +9,9 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
-                         ef_compress_update, int8_compress, int8_decompress,
-                         warmup_cosine)
+                         bf16_compress, bf16_decompress, ef_compress_update,
+                         fp8_compress, fp8_decompress, int8_compress,
+                         int8_decompress, warmup_cosine, wire_codec)
 
 
 def _numpy_adamw(g, m, v, p, lr, cfg, step):
@@ -97,6 +98,64 @@ def test_int8_roundtrip_bounded_error(scale):
     max_err = float(jnp.max(jnp.abs(x - y)))
     # quantization step = max|x| / 127
     assert max_err <= float(jnp.max(jnp.abs(x))) / 127 + 1e-6
+
+
+@pytest.mark.parametrize("scale", [1e-3, 0.1, 1.0, 37.0, 1e3])
+def test_bf16_roundtrip_relative_error(scale):
+    """bf16 shares f32's exponent, so round-trip error is purely the 8-bit
+    significand: elementwise relative error <= 2^-8 at any magnitude."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,)) * scale
+    y = bf16_decompress(bf16_compress(x))
+    assert y.dtype == jnp.float32
+    err = np.abs(np.asarray(x) - np.asarray(y))
+    bound = np.abs(np.asarray(x)) * 2.0**-8 + 1e-38
+    np.testing.assert_array_less(err, bound)
+
+
+@pytest.mark.parametrize("scale", [1e-3, 0.1, 1.0, 37.0, 1e3])
+def test_fp8_roundtrip_bounded_error(scale):
+    """fp8 e4m3 with a per-tensor scale: normal values round to 3 mantissa
+    bits (rel err <= 2^-3), the subnormal tail to an absolute step of the
+    scaled quantum — both bounds independent of the tensor's magnitude."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,)) * scale
+    payload = fp8_compress(x)
+    y = fp8_decompress(payload)
+    err = np.abs(np.asarray(x) - np.asarray(y))
+    s = float(payload["scale"])
+    bound = np.maximum(np.abs(np.asarray(x)) * 2.0**-3, s * 2.0**-9) + 1e-38
+    assert (err <= bound).all()
+
+
+def test_fp8_scale_saturates_at_amax():
+    # the largest-magnitude element maps exactly onto the e4m3 max (448):
+    # nothing clips, and decompress restores it to full precision
+    x = jnp.array([-7.0, 0.5, 3.5])
+    y = fp8_decompress(fp8_compress(x))
+    np.testing.assert_allclose(float(y[0]), -7.0, rtol=1e-6)
+
+
+def test_wire_codec_registry():
+    for kind in ("bf16", "fp8", "int8"):
+        compress, decompress = wire_codec(kind)
+        x = jax.random.normal(jax.random.PRNGKey(2), (32,))
+        y = decompress(compress(x))
+        assert y.shape == x.shape and y.dtype == jnp.float32
+    with pytest.raises(ValueError, match="unknown wire codec"):
+        wire_codec("fp4")
+
+
+def test_error_feedback_with_fp8_codec_converges():
+    """EF composes with any wire codec: the fp8 residual is carried, so the
+    mean of sent updates converges to the true gradient."""
+    g = jax.random.normal(jax.random.PRNGKey(3), (64,)) * 0.1
+    err = jnp.zeros_like(g)
+    sent = []
+    for _ in range(50):
+        payload, err = ef_compress_update(
+            g, err, compress=fp8_compress, decompress=fp8_decompress)
+        sent.append(fp8_decompress(payload))
+    avg = np.mean(np.stack([np.asarray(s) for s in sent]), axis=0)
+    np.testing.assert_allclose(avg, np.asarray(g), rtol=0.08, atol=0.02)
 
 
 def test_error_feedback_accumulates_residual():

@@ -397,39 +397,23 @@ def test_hpccg_3d_mesh_matches_1dev_oracle():
 @pytest.mark.slow
 def test_halo_scan_nd_peeled_ppermute_count_8dev():
     """3-D halo_scan_nd: one ppermute pair per axis per step, drain peeled.
-    Fully unrolled, a steps-step hdot scan on a 2x2x2 mesh compiles to
-    exactly 3 pairs * steps = 6*steps collective-permutes (fill pairs +
-    steps-1 in-flight pair sets). XLA reaps the unpeeled schedule's dead
-    drain pairs only when unrolled; the production while-loop lowering would
-    execute them, which is what the peel removes — so at steps=2 the peeled
-    scan must inline (length-1 scan, no `while`) while the unpeeled one
-    keeps a loop just to run the drain trip."""
+    Checked through the HLO schedule linter: the canonical `halo3d` target
+    (2x2x2 mesh, steps=2) must lint clean — PAIR-COUNT pins 2 pairs * 3
+    axes * 2 steps = 12 collective-permutes and DEAD-DRAIN proves every
+    exchange's halos reach compute — while the unpeeled mutation must trip
+    DEAD-DRAIN (the drain trip's exchange feeds nothing) and PAIR-COUNT
+    (one extra pair per axis)."""
     code = """
-    import json, jax, jax.numpy as jnp
-    from jax.sharding import PartitionSpec as P
-    from repro.analysis.hlo import count_ops
-    from repro.core.halo import halo_scan_nd
-    from repro.launch.mesh import make_grid_mesh
-    mesh = make_grid_mesh(2, 2, 2)
-    AXES = ("planes", "rows", "cols")
-    DEC = tuple(zip(AXES, (0, 1, 2)))
-    def star(p):
-        return (p[1:-1, 1:-1, 1:-1] + p[:-2, 1:-1, 1:-1] + p[2:, 1:-1, 1:-1]
-                + p[1:-1, :-2, 1:-1] + p[1:-1, 2:, 1:-1]
-                + p[1:-1, 1:-1, :-2] + p[1:-1, 1:-1, 2:]) / 7.0
-    def lower(steps, peel, unroll=1):
-        f = jax.jit(jax.shard_map(
-            lambda x: halo_scan_nd(x, star, DEC, 1, steps, periodic=True,
-                                   peel=peel, unroll=unroll)[0],
-            mesh=mesh, in_specs=(P(*AXES),), out_specs=P(*AXES)))
-        return f.lower(jnp.ones((8, 8, 8), jnp.float32)).compile().as_text()
-    out = {}
-    out["unrolled_eq_6steps"] = all(
-        count_ops(lower(s, peel=True, unroll=s), "collective-permute")
-        == 6 * s for s in (2, 3))
-    out["peeled_no_while"] = count_ops(lower(2, True), "while") == 0
-    out["unpeeled_while"] = count_ops(lower(2, False), "while") == 1
-    print(json.dumps(out))
+    import json
+    from repro.analysis.hlo_lint import lint_target
+    rep = lint_target("halo3d")          # PAIR-COUNT expects 2*3*steps,
+    broken = lint_target("broken_unpeeled_halo1d")   # DEAD-DRAIN negative
+    print(json.dumps({
+        "canonical_ok": rep.ok,
+        "permute_count_checked": rep.n_collectives == 12,
+        "unpeeled_dead_drain": "DEAD-DRAIN" in {f.rule for f in broken.errors},
+        "unpeeled_pair_count": "PAIR-COUNT" in {f.rule for f in broken.errors},
+    }))
     """
     r = run_devices(code, 8)
     assert all(r.values()), r
@@ -437,32 +421,24 @@ def test_halo_scan_nd_peeled_ppermute_count_8dev():
 
 @pytest.mark.slow
 def test_solver_ppermute_counts_nd():
-    """Compiled-solver collective structure on real meshes: one exchange
-    pair per decomposed axis per step/stage, and NO dead drain exchange.
-
-    * hpccg (2,2,2), iters=2 (scan inlines): fill chain (3 pairs) + one
-      in-scan chain (3 pairs) = 12 collective-permutes — the peeled final
-      iteration launches nothing.
-    * rk3 (2,2), steps=2: fill (2 pairs) + 3 stages * 2 pairs + drain step's
-      2 non-final stages * 2 pairs = 12 pairs = 24 permutes — the final
-      stage's two pairs are peeled (unpeeled would be 28)."""
+    """Compiled-solver collective structure on real meshes, via the HLO
+    schedule linter: one exchange pair per decomposed axis per step/stage
+    (PAIR-COUNT: hpccg_3d 12 permutes, rk3_2d 24), no dead drain exchange
+    (DEAD-DRAIN), and every exchange keeps dataflow-independent interior
+    compute to fly behind (NO-OVERLAP-WINDOW). The per-target arithmetic
+    lives in lint_targets.PERMUTES_* next to the schedule code."""
     code = """
-    import json, jax, jax.numpy as jnp
-    from repro.analysis.hlo import count_ops
-    from repro.core.stencil import _hpccg_solver, _rk3_solver
-    from repro.launch.mesh import make_grid_mesh
+    import json
+    from repro.analysis.hlo_lint import lint_target
     out = {}
-    f = _hpccg_solver(make_grid_mesh(2, 2, 2), ("planes", "rows", "cols"),
-                      2, "hdot", 4)
-    txt = f.lower(jnp.ones((12, 20, 20), jnp.float32)).compile().as_text()
-    out["hpccg_3d_cp"] = count_ops(txt, "collective-permute")
-    f = _rk3_solver(make_grid_mesh(2, 2), ("rows", "cols"), 2, 0.01, "hdot")
-    txt = f.lower(jnp.ones((12, 32, 32), jnp.float32)).compile().as_text()
-    out["rk3_2d_cp"] = count_ops(txt, "collective-permute")
+    for name in ("hpccg_3d", "rk3_2d"):
+        rep = lint_target(name)   # PAIR-COUNT pins 12 / 24 permutes,
+        out[name] = {"ok": rep.ok,            # DEAD-DRAIN pins no drain
+                     "errors": sorted({f.rule for f in rep.errors})}
     print(json.dumps(out))
     """
     r = run_devices(code, 8)
-    assert r == {"hpccg_3d_cp": 12, "rk3_2d_cp": 24}, r
+    assert all(v["ok"] for v in r.values()), r
 
 
 @pytest.mark.slow
@@ -551,45 +527,19 @@ def test_fsdp_step_hlo_one_rs_one_ag_per_bucket_reverse_emission():
     still computes. Emission order is read off channel_id, which jax assigns
     in trace order (the scheduled text order is backend-dependent)."""
     code = """
-    import json, re, jax, jax.numpy as jnp, numpy as np
-    from repro.config.base import ParallelConfig, RunConfig, TrainConfig
-    from repro.config.registry import get_arch
-    from repro.launch.mesh import make_mesh
-    from repro.runtime.trainer import Trainer
-
-    cfg = get_arch("qwen3-8b").reduced()
-    train = TrainConfig(global_batch=8, seq_len=32, warmup_steps=2,
-                        total_steps=10, checkpoint_every=10**6,
-                        checkpoint_dir="/tmp/repro_fsdp_hlo")
-    mesh = make_mesh((4,), ("data",))
-    t = Trainer(RunConfig(cfg, ParallelConfig(param_shard=True, remat="none"),
-                          train), mesh=mesh)
-    t.train(1)
-    layout = t._fsdp_layout
-    batch = t._place_batch(t._augment_frontend(t.data.batch_at(1)))
-    txt = t._jit_step.lower(t.params, t.opt_state, batch).compile().as_text()
-
-    def sized_channels(kind):
-        # [(channel_id, result_elements)] for every <kind> op definition
-        out = []
-        for ln in txt.splitlines():
-            m = re.search(rf"= [a-z0-9]+\\[(\\d+)\\]\\S* {kind}\\(", ln)
-            c = re.search(r"channel_id=(\\d+)", ln)
-            if m and c:
-                out.append((int(c.group(1)), int(m.group(1))))
-        return [s for _, s in sorted(out)]
-
-    rs, ag = sized_channels("reduce-scatter"), sized_channels("all-gather")
-    out = {
-        "one_rs_per_bucket": len(rs) == len(layout.groups),
-        "one_ag_per_bucket": len(ag) == len(layout.groups),
-        # scatter outputs are shard-sized: grads leave the program at 1/4
-        "rs_shard_sized": rs == [g.padded // 4
-                                 for g in reversed(layout.groups)],
-        # gathers rebuild the full buffers in forward bucket order
-        "ag_forward_order": ag == [g.padded for g in layout.groups],
-    }
-    print(json.dumps(out))
+    import json
+    from repro.analysis.hlo_lint import lint_target
+    # ONE-RS-ONE-AG pins one shard-sized RS + one full-sized AG per bucket
+    # buffer, BUCKET-ORDER pins reverse-topo RS / forward AG emission, and
+    # DONATION-LOST pins the donated state aliasing; expectations come from
+    # fsdp_layout_for itself (see lint_targets).
+    rep = lint_target("lm_fsdp_1d")
+    broken = lint_target("broken_double_gather_fsdp")
+    print(json.dumps({
+        "canonical_ok": rep.ok,
+        "double_gather_caught":
+            "ONE-RS-ONE-AG" in {f.rule for f in broken.errors},
+    }))
     """
     r = run_devices(code, 4)
     assert all(r.values()), r
@@ -602,85 +552,46 @@ def test_grad_sync_reverse_topo_emission_order_4dev():
     so the deepest bucket's all-reduce must carry the lowest channel id —
     with order='tree' the same buckets are emitted shallowest-first."""
     code = """
-    import json, re, functools, jax, jax.numpy as jnp
-    from jax.sharding import PartitionSpec as P
-    from repro.core.overlap import grad_sync
-    from repro.launch.mesh import make_mesh
-    mesh = make_mesh((4,), ("data",))
-    # distinctive sizes per depth so buckets are identifiable in HLO
-    tree = {"embed": jnp.zeros((11,)), "w1": jnp.zeros((23,)),
-            "w2": jnp.zeros((37,)), "head": jnp.zeros((53,))}
-    layers = {"embed": 0, "w1": 1, "w2": 2, "head": 3}
-    def emitted_sizes(order):
-        f = jax.jit(jax.shard_map(
-            functools.partial(grad_sync, axes="data", mode="hdot",
-                              num_buckets=4, layers=layers, order=order),
-            mesh=mesh, in_specs=(P(),), out_specs=P()))
-        txt = f.lower(tree).compile().as_text()
-        out = []
-        for ln in txt.splitlines():
-            m = re.search(r"= [a-z0-9]+\\[(\\d+)\\]\\S* all-reduce\\(", ln)
-            c = re.search(r"channel_id=(\\d+)", ln)
-            if m and c:
-                out.append((int(c.group(1)), int(m.group(1))))
-        return [s for _, s in sorted(out)]
+    import json
+    from repro.analysis.hlo_lint import lint_target
+    # BUCKET-ORDER compares channel-id order against make_buckets' own
+    # emission sequence ([53, 37, 23, 11] for reverse_topo on the fixture
+    # tree); the tree-order mutation must trip exactly that rule.
+    rep = lint_target("grad_sync_1d")
+    broken = lint_target("broken_tree_grad_sync")
     print(json.dumps({
-        "reverse_topo": emitted_sizes("reverse_topo"),
-        "tree": emitted_sizes("tree"),
+        "canonical_ok": rep.ok,
+        "tree_order_caught":
+            "BUCKET-ORDER" in {f.rule for f in broken.errors},
     }))
     """
     r = run_devices(code, 4)
-    assert r["reverse_topo"] == [53, 37, 23, 11], r
-    assert r["tree"] == [11, 23, 37, 53], r
+    assert all(r.values()), r
 
 
 @pytest.mark.slow
 def test_halo_scan_peeled_ppermute_count_4dev():
-    """The drain-step peel drops one ppermute pair per solve. Fully unrolled,
-    a steps-step hdot scan compiles to exactly 2*steps collective-permutes
-    (fill pair + steps-1 in-flight pairs) — the unpeeled schedule issues
-    2*(steps+1) (XLA reaps the dead pair only when unrolled; the production
-    while-loop lowering executes it, which is what the peel removes). At
-    steps=2 the peeled scan inlines (length-1 scan, no `while` at all) while
-    the unpeeled one keeps a loop just to run the drain trip. The same holds
-    for halo_scan_2d with two pairs (both axes) per step."""
+    """The drain-step peel drops one ppermute pair per solve, proven by the
+    HLO schedule linter: the canonical 1-D and 2-D halo scans lint clean
+    (PAIR-COUNT pins 2*axes*steps permutes, DEAD-DRAIN proves every halo is
+    consumed), the unpeeled mutation trips DEAD-DRAIN (the drain exchange's
+    result feeds nothing — XLA would reap it only when unrolled; the
+    production while-loop lowering executes it) plus PAIR-COUNT, and the
+    donation mutation (jit without donate_argnums) trips DONATION-LOST."""
     code = """
-    import json, jax, jax.numpy as jnp
-    from jax.sharding import PartitionSpec as P
-    from repro.analysis.hlo import count_ops
-    from repro.core.halo import halo_scan, halo_scan_2d
-    from repro.launch.mesh import make_grid_mesh, make_mesh
-    mesh = make_mesh((4,), ("data",))
-    mesh2 = make_grid_mesh(2, 2)
-    avg3 = lambda p: (p[:-2] + p[1:-1] + p[2:]) / 3.0
-    star = lambda p: (p[1:-1, 1:-1] + p[:-2, 1:-1] + p[2:, 1:-1]
-                      + p[1:-1, :-2] + p[1:-1, 2:]) / 5.0
-    def lower1(steps, peel, unroll=1):
-        f = jax.jit(jax.shard_map(
-            lambda x: halo_scan(x, avg3, "data", 1, 0, steps, periodic=True,
-                                peel=peel, unroll=unroll)[0],
-            mesh=mesh, in_specs=(P("data"),), out_specs=P("data")))
-        return f.lower(jnp.ones((16, 4), jnp.float32)).compile().as_text()
-    def lower2(steps, peel, unroll=1):
-        f = jax.jit(jax.shard_map(
-            lambda x: halo_scan_2d(x, star, ("rows", "cols"), 1, (0, 1),
-                                   steps, periodic=True, peel=peel,
-                                   unroll=unroll)[0],
-            mesh=mesh2, in_specs=(P("rows", "cols"),),
-            out_specs=P("rows", "cols")))
-        return f.lower(jnp.ones((16, 16), jnp.float32)).compile().as_text()
+    import json
+    from repro.analysis.hlo_lint import lint_target
     out = {}
-    out["unrolled_eq_2steps"] = all(
-        count_ops(lower1(s, peel=True, unroll=s), "collective-permute")
-        == 2 * s for s in (2, 4))
-    out["peeled_no_while"] = count_ops(lower1(2, True), "while") == 0
-    out["unpeeled_while"] = count_ops(lower1(2, False), "while") == 1
-    # 2-D: two pairs per step (one per axis) -> fully-unrolled peeled count
-    # is 4*steps; the scan-lowered (while) form keeps both pairs in the body
-    out["unrolled_2d_eq_4steps"] = all(
-        count_ops(lower2(s, peel=True, unroll=s), "collective-permute")
-        == 4 * s for s in (2, 3))
-    out["peeled_2d_no_while"] = count_ops(lower2(2, True), "while") == 0
+    for name in ("halo1d", "halo2d"):   # PAIR-COUNT pins 2*axes*steps
+        rep = lint_target(name)
+        out[name + "_ok"] = rep.ok
+    broken = lint_target("broken_unpeeled_halo1d")
+    rules = {f.rule for f in broken.errors}
+    out["unpeeled_dead_drain"] = "DEAD-DRAIN" in rules
+    out["unpeeled_extra_pair"] = "PAIR-COUNT" in rules
+    nodon = lint_target("broken_no_donate_halo1d")
+    out["no_donate_caught"] = (
+        "DONATION-LOST" in {f.rule for f in nodon.errors})
     print(json.dumps(out))
     """
     r = run_devices(code, 4)
