@@ -4,8 +4,10 @@ Reads BENCH_quick.json (as written by ``python -m benchmarks.run --quick``)
 and FAILS (exit 1) when any suite's headline ratio (``hdot_two_phase_ratio*``
 per topology, plus lm_step's ZeRO-3 ``fsdp_two_phase_ratio``) drops below
 ``--min-ratio`` — i.e. when an HDOT schedule has become slower than the
-two-phase baseline it exists to beat. Suites that errored fail the gate
-outright.
+two-phase baseline it exists to beat. The ``moe`` suite's headline is the
+capacity-chunked a2a_scan (moe_a2a_chunks=2) vs monolithic dispatch/combine
+ratio, gated exactly like the halo/grad-sync suites. Suites that errored
+fail the gate outright.
 
 Run:  python -m benchmarks.ci_gate [--min-ratio 1.0] [--path BENCH_quick.json]
 """

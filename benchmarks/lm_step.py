@@ -12,6 +12,13 @@ bucket-wise flat shards (1/devices residency), all-gathered forward-order at
 the top of the step and reduce-scattered reverse-topologically in the
 backward — same loss/backward as the other modes, so the ratio tracks what
 the bucket-wise gather/scatter costs over the replicated bucketed sync.
+
+The `moe` suite (``--moe``) applies the same two-schedule comparison to the
+expert-parallel MoE dispatch: two_phase = monolithic dispatch/combine
+all-to-alls (moe_a2a_chunks=1), hdot = the capacity-chunked a2a_scan double
+buffer (moe_a2a_chunks=2) where the slice-k+1 dispatch streams while the
+slice-k expert FFN computes. Full qwen3-moe reduced train step on a
+(1, devices) ("data", "model") mesh — every device in one EP group.
 """
 from __future__ import annotations
 
@@ -162,6 +169,69 @@ def plain_ref(g, mesh2):
         in_specs=P(), out_specs=P(), check_vma=False))(g)
 
 
+def moe_worker(devices: int, steps: int) -> Dict[str, Any]:
+    import jax
+    import numpy as np
+
+    from benchmarks._util import timeit
+    from repro.analysis.hlo import parse_collectives
+    from repro.config.registry import get_arch
+    from repro.launch.mesh import make_mesh
+    from repro.models.model import ModelOptions, build_model
+    from repro.sharding.rules import use_sharding
+
+    # all devices on the 'model' axis -> one EP group: the regime where the
+    # dispatch/combine all-to-alls dominate and the capacity chunking has
+    # latency to hide. S chosen so C = ceil(S_loc*K/E * cf) stays divisible
+    # by the chunk count on every bench topology (n=2 -> C=20, n=4 -> C=10).
+    mesh = make_mesh((1, devices), ("data", "model"))
+    cfg = get_arch("qwen3-moe-30b-a3b").reduced()
+    B, S = 4, 64
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+             "targets": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+
+    out: Dict[str, Any] = {"devices": devices, "arch": cfg.name,
+                           "batch": B, "seq": S}
+    grads_by_mode = {}
+    # two_phase = monolithic dispatch/combine (Q=1); hdot = capacity-chunked
+    # double buffer (Q=2): the slice-k+1 dispatch is issued before the
+    # slice-k expert FFN so the async scheduler can run them concurrently
+    for mode, q in (("two_phase", 1), ("hdot", 2)):
+        model = build_model(cfg, ModelOptions(attn_impl="dense",
+                                              moe_a2a_chunks=q))
+        with use_sharding(mesh):
+            params = model.init(jax.random.PRNGKey(0))
+            f = jax.jit(jax.value_and_grad(model.train_loss))
+            sec = timeit(f, params, batch)
+            loss, g = f(params, batch)
+            hlo = f.lower(params, batch).compile().as_text()
+        grads_by_mode[mode] = g
+        coll = parse_collectives(hlo)
+        out[mode] = {"seconds": sec, "steps_per_s": 1.0 / sec,
+                     "loss": float(loss), "a2a_chunks": q,
+                     "a2a_ops": coll.by_kind().get("all-to-all", (0, 0))[0],
+                     "wire_bytes": coll.total_wire_bytes}
+
+    # chunking must be a pure schedule change: same loss, same grads up to
+    # the per-slice accumulation reordering the capacity reduction — a few
+    # ulps AT THE LEAF'S OWN precision (expert grads are bf16, eps 2^-7)
+    def leaf_close(x, y):
+        import jax.numpy as jnp
+
+        a = np.asarray(x, np.float32)
+        b = np.asarray(y, np.float32)
+        atol = 4 * float(jnp.finfo(x.dtype).eps) * (float(np.max(np.abs(a)))
+                                                    + 1e-12)
+        return np.allclose(a, b, rtol=0, atol=atol)
+
+    out["grads_identical"] = bool(all(
+        leaf_close(x, y)
+        for x, y in zip(jax.tree.leaves(grads_by_mode["two_phase"]),
+                        jax.tree.leaves(grads_by_mode["hdot"]))))
+    return out
+
+
 def run(sizes=(2, 8), steps: int = 3) -> Dict[str, Any]:
     from benchmarks._util import run_worker
 
@@ -170,16 +240,37 @@ def run(sizes=(2, 8), steps: int = 3) -> Dict[str, Any]:
     return {"table": "LM grad-sync schedules", "rows": rows}
 
 
+def run_moe(sizes=(2, 4), steps: int = 3) -> Dict[str, Any]:
+    from benchmarks._util import run_worker
+
+    rows = [run_worker("benchmarks.lm_step", d,
+                       ["--moe", "--devices", str(d)])
+            for d in sizes]
+    return {"table": "MoE EP a2a schedules (capacity-chunked vs monolithic)",
+            "rows": rows}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--moe", action="store_true",
+                    help="MoE EP a2a bench instead of the grad-sync bench")
     ap.add_argument("--devices", type=int, default=2)
     ap.add_argument("--steps", type=int, default=3)
     args = ap.parse_args()
     if args.worker:
         from benchmarks._util import emit
 
-        emit(worker(args.devices, args.steps))
+        emit(moe_worker(args.devices, args.steps) if args.moe
+             else worker(args.devices, args.steps))
+        return
+    if args.moe:
+        rec = run_moe()
+        for r in rec["rows"]:
+            print(f"devices={r['devices']} "
+                  f"two_phase: {r['two_phase']['a2a_ops']} a2as, "
+                  f"hdot: {r['hdot']['a2a_ops']} a2as, "
+                  f"identical={r['grads_identical']}")
         return
     rec = run()
     for r in rec["rows"]:

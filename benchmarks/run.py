@@ -6,6 +6,7 @@
   hpccg               paper §4.3 / Fig 8 (taskified CG)           measured
   bench_overlap       Fig 1 concept (collective matmul ring)      measured
   lm_step             HDOT grad-sync buckets on an LM step        measured
+  lm_moe              MoE EP capacity-chunked a2a vs monolithic   measured
 
 Results land in results/bench/*.json + a markdown summary. Run:
   PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
@@ -51,13 +52,14 @@ SUITES = {
         s=1024 if quick else 4096, m=1024 if quick else 2048,
         n=1024 if quick else 2048),
     "lm_step": lambda quick: lm_step.run(sizes=(2,) if quick else (2, 8)),
+    "lm_moe": lambda quick: lm_step.run_moe(sizes=(2,) if quick else (2, 4)),
 }
 
 
 # suite -> short key in the consolidated BENCH_quick.json record
 QUICK_KEYS = {"table2_heat2d": "heat2d", "table4_creams": "creams",
               "hpccg": "hpccg", "bench_overlap": "overlap",
-              "lm_step": "lm_step"}
+              "lm_step": "lm_step", "lm_moe": "moe"}
 
 
 def _schedule_rates(row: dict):

@@ -33,6 +33,10 @@ from repro.analysis.rules import LintContext
 PERMUTES_HALO = lambda axes, steps: 2 * axes * steps
 PERMUTES_RK3 = lambda axes, steps: 2 * axes * 3 * steps
 PERMUTES_HPCCG = lambda axes, iters: 2 * axes * iters
+#   moe EP a2a_scan   : dispatch + combine per capacity slice (2Q) in the
+#                       forward, and 2Q again in the backward (a2a is its
+#                       own transpose)
+A2AS_MOE = lambda chunks: 4 * chunks
 
 _HLO_DTYPE = {"float32": "f32", "float64": "f64", "float16": "f16",
               "bfloat16": "bf16", "int32": "s32", "int64": "s64",
@@ -418,6 +422,66 @@ def _lm_fsdp_1d() -> Target:
                   ctx)
 
 
+# ------------------------------------------------------------- moe EP a2a
+def _lm_moe_grad_target(name: str, a2a_chunks: int) -> Target:
+    """value_and_grad of the MoE EP layer (the same program
+    ``tests/test_moe_ep.py`` checks numerically against the dense oracle) on
+    a (1 data x 2 model) mesh: the model axis is non-trivial, so
+    ``moe_apply`` takes the shard_map EP path and its all-to-alls are the
+    only explicit collectives in the pre-opt HLO.
+
+    Deliberately the LAYER grad, not the full lm train step: both the
+    optimizer (``b1*m`` on every param leaf) and any vocab readout's
+    label-side gradient seed (one-hot compare / take_along_axis scatter,
+    B*S*V elements) are dataflow-independent of every trunk collective and
+    would hand even the monolithic a2a a spurious NO-OVERLAP-WINDOW pass.
+    The layer program keeps the window question honest: the only sized
+    compute a forward dispatch/combine slice can be independent of is
+    *another slice's* expert FFN, which is exactly the invariant the
+    chunked schedule exists to create.
+
+    ``scalar_elements`` is raised to 2048 so router bookkeeping (the aux
+    one_hot is exactly B_loc*S_loc*K*E = 1024 elements here, the f_e/p_e
+    pmeans 4) neither counts as an overlap window nor as sized traffic —
+    only FFN-scale compute (>= 10240 elements/slice) can hide an a2a.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.config.registry import get_arch
+    from repro.launch.mesh import make_mesh
+    from repro.models.moe import moe_apply, moe_specs
+    from repro.sharding.rules import use_sharding
+
+    cfg = get_arch("qwen3-moe-30b-a3b").reduced()
+    mesh = make_mesh((1, 2), ("data", "model"))
+
+    def loss(p, x):
+        y, aux = moe_apply(p, x, cfg, a2a_chunks=a2a_chunks)
+        return jnp.sum(y.astype(jnp.float32) ** 2) + aux
+
+    # grads w.r.t. params AND activations: in the full lm, d_x flows to the
+    # previous layer through the transposed dispatch a2a — dropping it would
+    # silently halve the backward a2a count
+    jitted = jax.jit(jax.value_and_grad(loss, argnums=(0, 1)))
+    pspec = {k: jax.ShapeDtypeStruct(s.shape, s.dtype)
+             for k, s in moe_specs(cfg).items()}
+    xspec = jax.ShapeDtypeStruct((8, 32, cfg.d_model), jnp.bfloat16)
+    # the EP path is selected at trace time from current_context()
+    with use_sharding(mesh):
+        txt = _pre_opt_text(jitted, pspec, xspec)
+    ctx = LintContext(target=name, expected_permute_total=0,
+                      expected_a2a_total=A2AS_MOE(a2a_chunks),
+                      scalar_elements=2048)
+    return Target(name, txt, ctx)
+
+
+@target("lm_moe_ep")
+def _lm_moe_ep() -> Target:
+    """MoE EP grads, a2a_scan chunked (Q=2): every a2a slice overlaps FFN."""
+    return _lm_moe_grad_target("lm_moe_ep", 2)
+
+
 # ------------------------------------------------- mutation fixtures
 @broken("broken_unpeeled_halo1d")
 def _broken_unpeeled() -> Target:
@@ -486,6 +550,18 @@ def _broken_two_phase_heat2d() -> Target:
     txt = _pre_opt_text(f, jax.ShapeDtypeStruct((32, 32), jnp.float32))
     return Target("broken_two_phase_heat2d", txt,
                   LintContext(target="broken_two_phase_heat2d"))
+
+
+@broken("broken_monolithic_a2a_moe")
+def _broken_monolithic_a2a() -> Target:
+    """Monolithic MoE a2a (Q=1): dispatch/combine with zero overlap window.
+
+    The lint context still expects the monolithic pair count (4 a2as: the
+    un-chunked fwd+bwd dispatch/combine), so PAIR-COUNT stays green and the
+    failure is attributed to the schedule shape: NO-OVERLAP-WINDOW fires
+    because every sized op in the module is an ancestor or descendant of
+    the bulk a2as — nothing can hide them."""
+    return _lm_moe_grad_target("broken_monolithic_a2a_moe", 1)
 
 
 @broken("broken_double_gather_fsdp")

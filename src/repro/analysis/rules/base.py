@@ -64,6 +64,10 @@ class LintContext:
     # schedule: 2 pairs/axis/step minus the peeled drain => 2*axes*steps).
     expected_permutes: Optional[Dict[str, int]] = None
     expected_permute_total: Optional[int] = None
+    # PAIR-COUNT: expected all-to-alls (MoE EP dispatch+combine — 2Q per
+    # forward and 2Q per backward MoE layer lowering; a2a is its own
+    # transpose so there is no fwd/bwd ring balance to check).
+    expected_a2a_total: Optional[int] = None
     # BUCKET-ORDER / ONE-RS-ONE-AG: per-(bucket x dtype) flat-buffer element
     # counts in *emission* order, from FsdpLayout / make_buckets.
     expected_rs_elements: Optional[List[int]] = None

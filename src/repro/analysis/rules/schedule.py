@@ -56,6 +56,13 @@ class PairCountRule(Rule):
     sends none). More permutes means duplicated halo traffic; fewer means a
     missing exchange. Also checks fwd/bwd balance: every source_target_pairs
     ring must appear exactly as often as its reverse.
+
+    The same arithmetic covers the MoE EP all-to-alls when
+    ``expected_a2a_total`` is set: the chunked schedule emits exactly 2Q
+    (dispatch + combine over Q capacity slices) per traced MoE layer body,
+    forward and backward alike — more means duplicated token traffic, fewer
+    a silently-merged (monolithic) dispatch. a2a is its own transpose, so
+    there is no fwd/bwd ring-balance counterpart.
     """
     id = "PAIR-COUNT"
     fix_hint = ("one ppermute pair per axis per step: check the unroll "
@@ -76,6 +83,22 @@ class PairCountRule(Rule):
                     out.append(self.op_finding(msg, anchor[0], anchor[1]))
                 else:
                     out.append(self.finding(msg))
+        if ctx.expected_a2a_total is not None:
+            a2as = module.collectives(["all-to-all"])
+            got = len(a2as)
+            if got != ctx.expected_a2a_total:
+                msg = (f"expected {ctx.expected_a2a_total} all-to-alls for "
+                       f"{ctx.target or 'schedule'} (2 x a2a_chunks per MoE "
+                       f"layer body, dispatch + combine), found {got}")
+                hint = ("the a2a_scan capacity chunking emits exactly "
+                        "dispatch+combine per slice: check moe_a2a_chunks, "
+                        "scan_layers (one textual body per direction) and "
+                        "that remat is not re-tracing the MoE block")
+                if a2as:
+                    out.append(self.op_finding(msg, a2as[0][0], a2as[0][1],
+                                               fix_hint=hint))
+                else:
+                    out.append(self.finding(msg, fix_hint=hint))
         # fwd/bwd balance: reverse of each ring pattern appears equally often
         pattern_counts = Counter(i.source_target_pairs for _, i in permutes)
         for pattern, n in sorted(pattern_counts.items()):

@@ -124,12 +124,18 @@ class ModelConfig:
             n_layers = self.num_layers
             total = per_layer * n_layers
         elif self.family == "moe":
-            assert self.moe is not None
+            if self.moe is None:
+                raise ValueError(
+                    f"config {self.name!r}: family='moe' requires a MoEConfig "
+                    f"on cfg.moe")
             ffn = self.moe.num_experts * 3 * d * self.moe.d_ff_expert
             router = d * self.moe.num_experts
             total = (attn_params() + ffn + router) * self.num_layers
         elif self.family == "ssm":
-            assert self.ssm is not None
+            if self.ssm is None:
+                raise ValueError(
+                    f"config {self.name!r}: family='ssm' requires an "
+                    f"SSMConfig on cfg.ssm")
             di = self.ssm.d_inner(d)
             nh = self.ssm.num_heads(d)
             # in_proj produces [z, x, B, C, dt]; out_proj back to d
@@ -138,7 +144,10 @@ class ModelConfig:
             conv = self.ssm.conv_kernel * (di + 2 * self.ssm.state_dim)
             total = (in_proj + out_proj + conv + 2 * nh) * self.num_layers
         elif self.family == "hybrid":
-            assert self.hybrid is not None
+            if self.hybrid is None:
+                raise ValueError(
+                    f"config {self.name!r}: family='hybrid' requires a "
+                    f"HybridConfig on cfg.hybrid")
             w = self.hybrid.lru_width or d
             rglru = d * 2 * w + w * d + 3 * w + self.hybrid.conv_kernel * w
             pat = self.hybrid.pattern
@@ -151,7 +160,10 @@ class ModelConfig:
                 rglru + dense_ffn(self.d_ff)
             )
         elif self.family == "encdec":
-            assert self.encdec is not None
+            if self.encdec is None:
+                raise ValueError(
+                    f"config {self.name!r}: family='encdec' requires an "
+                    f"EncDecConfig on cfg.encdec")
             dec = (2 * attn_params() + dense_ffn(self.d_ff)) * self.num_layers
             enc = (attn_params() + dense_ffn(self.d_ff)) * self.encdec.enc_layers
             total = dec + enc
@@ -163,7 +175,10 @@ class ModelConfig:
         """Active parameters per token (MoE: only top-k experts count)."""
         if self.family != "moe":
             return self.num_params()
-        assert self.moe is not None
+        if self.moe is None:
+            raise ValueError(
+                f"config {self.name!r}: family='moe' requires a MoEConfig "
+                f"on cfg.moe")
         d = self.d_model
         inactive = (self.moe.num_experts - self.moe.top_k) * 3 * d * self.moe.d_ff_expert
         return self.num_params() - inactive * self.num_layers
@@ -233,6 +248,12 @@ class ParallelConfig:
     accum_steps: int = 1
     # use ppermute-ring collective matmul for TP instead of plain all-gather
     collective_matmul: bool = False
+    # MoE expert-parallel a2a over-decomposition degree Q (core.a2a_scan):
+    # the dispatch/combine all-to-alls are chunked into Q capacity slices so
+    # slice k+1's dispatch and slice k-1's combine overlap slice k's expert
+    # FFN. 1 = monolithic a2a (the two-phase baseline); must divide the
+    # per-shard expert capacity C.
+    moe_a2a_chunks: int = 1
     # int8 error-feedback compression on the cross-pod gradient hop
     grad_compression: str = "none"     # 'none' | 'int8_ef'
 

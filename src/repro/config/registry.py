@@ -39,7 +39,10 @@ def get_arch(arch_id: str) -> ModelConfig:
             raise KeyError(f"unknown arch {arch_id!r}; choose from {list_archs()}")
     mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[key]}")
     cfg: ModelConfig = mod.CONFIG
-    assert cfg.name == key, (cfg.name, key)
+    if cfg.name != key:
+        raise ValueError(
+            f"registry mismatch: repro.configs.{_ARCH_MODULES[key]} declares "
+            f"CONFIG.name={cfg.name!r} but is registered under {key!r}")
     return cfg
 
 

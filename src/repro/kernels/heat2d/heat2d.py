@@ -85,15 +85,24 @@ def heat2d_sweep_pallas(u: jax.Array, tile: tuple = (256, 256),
     interior tiles' strips. Default None = zeros = global Dirichlet-0."""
     nx, ny = u.shape
     tx, ty = min(tile[0], nx), min(tile[1], ny)
-    assert nx % tx == 0 and ny % ty == 0, (u.shape, tile)
+    if nx % tx != 0 or ny % ty != 0:
+        raise ValueError(
+            f"heat2d: grid shape {u.shape} is not divisible by tile "
+            f"{(tx, ty)} (requested tile={tile})")
     gx, gy = nx // tx, ny // ty
     if halo is None:
         hn = hs = jnp.zeros((1, ny), u.dtype)
         hw = he = jnp.zeros((nx, 1), u.dtype)
     else:
         hn, hs, hw, he = halo
-        assert hn.shape == hs.shape == (1, ny), (hn.shape, hs.shape)
-        assert hw.shape == he.shape == (nx, 1), (hw.shape, he.shape)
+        if not (hn.shape == hs.shape == (1, ny)):
+            raise ValueError(
+                f"heat2d: north/south halo strips must be shape {(1, ny)} "
+                f"for grid {u.shape}; got {hn.shape} / {hs.shape}")
+        if not (hw.shape == he.shape == (nx, 1)):
+            raise ValueError(
+                f"heat2d: west/east halo strips must be shape {(nx, 1)} "
+                f"for grid {u.shape}; got {hw.shape} / {he.shape}")
 
     kernel = functools.partial(_kernel, sweeps=sweeps, tx=tx, ty=ty, gx=gx, gy=gy)
 

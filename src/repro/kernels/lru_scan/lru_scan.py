@@ -47,7 +47,10 @@ def lru_scan_pallas(a: jax.Array, b: jax.Array, h0: Optional[jax.Array] = None,
     """a, b: (batch, seq, width). Returns (h (batch, seq, width), h_last)."""
     bsz, l, w = a.shape
     chunk = min(chunk, l)
-    assert l % chunk == 0, (l, chunk)
+    if l % chunk != 0:
+        raise ValueError(
+            f"lru_scan_pallas: sequence length {l} is not divisible by "
+            f"chunk={chunk} (a.shape={a.shape})")
     nc = l // chunk
     if h0 is None:
         h0 = jnp.zeros((bsz, w), jnp.float32)

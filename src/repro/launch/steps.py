@@ -274,7 +274,8 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig,
     parallel = parallel or ParallelConfig()
     options = options or ModelOptions(
         attn_impl="blockwise" if shape.seq_len > 8192 else "dense",
-        scan_layers=parallel.scan_layers, remat=parallel.remat)
+        scan_layers=parallel.scan_layers, remat=parallel.remat,
+        moe_a2a_chunks=parallel.moe_a2a_chunks)
     model = build_model(cfg, options)
     io = input_specs(cfg, shape, options)
     batch_specs, batch_axes = io["specs"], io["axes"]

@@ -45,6 +45,10 @@ class ModelOptions:
     # GSPMD/jit path; under shard_map manual axes custom_vjp cotangent
     # varying-axes checks reject it -> manual-mode callers set False.
     fused_xent: bool = True
+    # MoE expert-parallel a2a over-decomposition degree Q (core.a2a_scan):
+    # dispatch/combine chunked into Q capacity slices so slice k+1's a2a
+    # overlaps slice k's expert FFN. 1 = monolithic (today's schedule).
+    moe_a2a_chunks: int = 1
     dtype: Any = jnp.bfloat16
 
 
@@ -168,7 +172,8 @@ class LanguageModel:
         x, new_caches, aux = tfm.stack_apply(
             params["layers"], x, cfg, positions, mode, caches, pos,
             self.opt.attn_impl, remat=self.opt.remat, enc_out=enc_out,
-            unroll_chunks=self.opt.unroll_chunks)
+            unroll_chunks=self.opt.unroll_chunks,
+            moe_chunks=self.opt.moe_a2a_chunks)
         return x, new_caches, aux
 
     # ------------------------------------------------------------ entry points

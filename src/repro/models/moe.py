@@ -27,7 +27,10 @@ from repro.sharding.rules import with_logical
 
 def moe_specs(cfg: ModelConfig, dtype=jnp.bfloat16) -> Dict[str, ParamSpec]:
     m = cfg.moe
-    assert m is not None
+    if m is None:
+        raise ValueError(
+            f"moe_specs: config {cfg.name!r} (family={cfg.family!r}) has no "
+            f"MoEConfig — only family='moe' configs carry cfg.moe")
     d, f, e = cfg.d_model, m.d_ff_expert, m.num_experts
     return {
         "router": ParamSpec((d, e), ("embed", None), jnp.float32),
@@ -63,12 +66,18 @@ def _dispatch_tables(assign: jax.Array, E: int, C: int) -> Tuple[jax.Array, jax.
     return gather_ids, rank.reshape(G, T, K), keep.reshape(G, T, K)
 
 
-def moe_apply(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+def moe_apply(p, x: jax.Array, cfg: ModelConfig,
+              a2a_chunks: int = 1) -> Tuple[jax.Array, jax.Array]:
     """x: (B, S, D). Dispatches to the expert-parallel a2a path when the mesh
     shards experts (E divisible by the model axis); otherwise the dense
-    capacity-dispatch below. Returns (output, aux load-balancing loss)."""
+    capacity-dispatch below. `a2a_chunks` is the EP dispatch/combine
+    over-decomposition degree Q (core.a2a_scan; 1 = monolithic).
+    Returns (output, aux load-balancing loss)."""
     m = cfg.moe
-    assert m is not None
+    if m is None:
+        raise ValueError(
+            f"moe_apply: config {cfg.name!r} (family={cfg.family!r}) has no "
+            f"MoEConfig — only family='moe' configs carry cfg.moe")
     from repro.sharding.rules import current_context
 
     ctx = current_context()
@@ -76,14 +85,15 @@ def moe_apply(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
         n = ctx.axis_size("model")
         if n > 1 and m.num_experts % n == 0:
             if x.shape[1] % n == 0:
-                return moe_apply_ep(p, x, cfg, ctx)
+                return moe_apply_ep(p, x, cfg, ctx, a2a_chunks=a2a_chunks)
             if x.shape[1] == 1 and x.shape[0] % n == 0:
                 # decode: a single token per sequence — the BATCH is the
                 # token domain; swap it into the seq slot so the same EP
                 # dispatch applies (measured: qwen3-moe decode_32k collective
                 # bytes, EXPERIMENTS §Perf cell-B addendum)
                 y, aux = moe_apply_ep(p, x.swapaxes(0, 1), cfg, ctx,
-                                      tokens_on_batch=True)
+                                      tokens_on_batch=True,
+                                      a2a_chunks=a2a_chunks)
                 return y.swapaxes(0, 1), aux
     return moe_apply_dense(p, x, cfg)
 
@@ -135,10 +145,13 @@ def moe_apply_dense(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.A
 
 # ------------------------------------------------------------ expert parallel
 def moe_apply_ep(p, x: jax.Array, cfg: ModelConfig, ctx,
-                 tokens_on_batch: bool = False) -> Tuple[jax.Array, jax.Array]:
+                 tokens_on_batch: bool = False,
+                 a2a_chunks: int = 1) -> Tuple[jax.Array, jax.Array]:
     """shard_map expert parallelism (§Perf cell B): tokens stay seq-sharded,
     experts stay model-sharded, and the ONLY cross-chip traffic is the
-    all-to-all of capacity-bucketed tokens (there and back).
+    all-to-all of capacity-bucketed tokens (there and back) — chunked into
+    `a2a_chunks` capacity slices by `core.a2a_scan` so slice k+1's dispatch
+    and slice k-1's combine overlap slice k's expert FFN.
 
     HDOT structure: the per-chip dispatch reuses the SAME `_dispatch_tables`
     scheme the dense path uses globally — the process-level partition applied
@@ -147,13 +160,36 @@ def moe_apply_ep(p, x: jax.Array, cfg: ModelConfig, ctx,
     all-reduces (measured 21 GB/chip/layer for qwen3-moe train_4k)."""
     from jax.sharding import PartitionSpec as P
 
+    from repro.core.a2a_scan import a2a_scan
     from repro.sharding.rules import resolve_pspec
 
     m = cfg.moe
     B, S, D = x.shape
     E, K = m.num_experts, m.top_k
     n = ctx.axis_size("model")
+    if E % n != 0:
+        raise ValueError(
+            f"moe_apply_ep: num_experts={E} is not divisible by the model "
+            f"axis size {n} ({cfg.name!r}); EP shards experts over 'model' — "
+            f"use the dense/expert-TP path for this mesh")
     E_loc = E // n
+    if x.shape[1] % n != 0:
+        token_dim = "batch" if tokens_on_batch else "seq"
+        raise ValueError(
+            f"moe_apply_ep: token dim ({token_dim}={x.shape[1]}) is not "
+            f"divisible by the model axis size {n} ({cfg.name!r}); the EP "
+            f"dispatch seq-shards tokens over 'model'")
+    # per-shard capacity, sized to the LOCAL token count (dim 1 is sharded
+    # over exactly the model axis in both the train and decode layouts) —
+    # computed here, outside the shard_map body, so a bad Q fails loudly at
+    # trace time instead of deep inside a reshape
+    C = capacity(x.shape[1] // n, E, K, m.capacity_factor)
+    if a2a_chunks < 1 or C % a2a_chunks != 0:
+        raise ValueError(
+            f"moe_apply_ep: a2a_chunks={a2a_chunks} must be >=1 and divide "
+            f"the expert capacity C={C} (tokens/shard={x.shape[1] // n}, "
+            f"num_experts={E}, top_k={K}, "
+            f"capacity_factor={m.capacity_factor}, {cfg.name!r})")
 
     # router in GSPMD-land (weights may be FSDP-sharded over data)
     logits = x.astype(jnp.float32) @ p["router"]                  # (B,S,E)
@@ -188,8 +224,7 @@ def moe_apply_ep(p, x: jax.Array, cfg: ModelConfig, ctx,
         aux = E * jnp.sum(f_e * p_e) * m.router_aux_loss_coef
 
         # task-level dispatch, per chip — same scheme as the dense path,
-        # capacity sized to the LOCAL token count
-        C = capacity(S_loc, E, K, m.capacity_factor)
+        # capacity C closed over from the trace-time validation above
         gather_ids, rank, keep = _dispatch_tables(assign, E, C)
         x_pad = jnp.concatenate([x, jnp.zeros((B_loc, 1, D), x.dtype)], axis=1)
         xe = jnp.take_along_axis(
@@ -197,20 +232,26 @@ def moe_apply_ep(p, x: jax.Array, cfg: ModelConfig, ctx,
             gather_ids.reshape(B_loc, E * C)[:, :, None, None], axis=1)
         xe = xe.reshape(B_loc, E, C, D)
 
-        # process-level dispatch: a2a the expert-bucketed slots to the owners
+        # process-level dispatch: a2a the expert-bucketed slots to the owners,
+        # over-decomposed along the capacity dim — slice k+1's dispatch and
+        # slice k-1's combine ride under slice k's FFN (a2a_chunks=1 emits
+        # exactly the old monolithic two-a2a program)
         xs = xe.reshape(B_loc, n, E_loc, C, D)
         xs = jnp.moveaxis(xs, 1, 0)                               # (n, B_loc, E_loc, C, D)
-        xr = jax.lax.all_to_all(xs, "model", 0, 0)                # src-major
 
-        # expert FFN over everything received (flops == active tokens)
-        xf = jnp.moveaxis(xr, 2, 0).reshape(E_loc, n * B_loc * C, D)
-        h = jax.nn.silu(jnp.einsum("etd,edf->etf", xf, gate))
-        h = h * jnp.einsum("etd,edf->etf", xf, up)
-        yf = jnp.einsum("etf,efd->etd", h, down)
+        def ffn(xr, _k):
+            # expert FFN over one received capacity slice (flops == active
+            # tokens); einsums contract only d/f, never the sliced C dim,
+            # so chunking is value-preserving
+            Cq = xr.shape[3]
+            xf = jnp.moveaxis(xr, 2, 0).reshape(E_loc, n * B_loc * Cq, D)
+            h = jax.nn.silu(jnp.einsum("etd,edf->etf", xf, gate))
+            h = h * jnp.einsum("etd,edf->etf", xf, up)
+            yf = jnp.einsum("etf,efd->etd", h, down)
+            # return trip layout (paper Code 11: weighted per-slot partials)
+            return jnp.moveaxis(yf.reshape(E_loc, n, B_loc, Cq, D), 0, 2)
 
-        # return trip + combine (paper Code 11: weighted per-slot partials)
-        yr = jnp.moveaxis(yf.reshape(E_loc, n, B_loc, C, D), 0, 2)
-        ys = jax.lax.all_to_all(yr, "model", 0, 0)                # (n, B_loc, E_loc, C, D)
+        ys = a2a_scan(xs, ffn, "model", chunks=a2a_chunks, dim=3)
         ye = jnp.moveaxis(ys, 0, 1).reshape(B_loc, E * C, D)
         ye = jnp.concatenate([ye, jnp.zeros((B_loc, 1, D), ye.dtype)], axis=1)
         slot = jnp.where(keep, assign * C + rank, E * C)

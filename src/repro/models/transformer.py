@@ -87,6 +87,7 @@ def layer_apply(p, x: jax.Array, cfg: ModelConfig, kind: str,
                 positions: jax.Array, mode: str,
                 cache: Optional[Dict], pos: Optional[jax.Array],
                 attn_impl: str, enc_out=None, unroll_chunks: bool = False,
+                moe_chunks: int = 1,
                 ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
     """One block. Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -143,7 +144,7 @@ def layer_apply(p, x: jax.Array, cfg: ModelConfig, kind: str,
 
     h = _norm(p, x, cfg, "norm2")
     if kind == "attn_moe":
-        y, aux = moe_mod.moe_apply(p["moe"], h, cfg)
+        y, aux = moe_mod.moe_apply(p["moe"], h, cfg, a2a_chunks=moe_chunks)
     else:
         y = mlp_apply(p["mlp"], h)
     x = x + y
@@ -218,7 +219,8 @@ def stack_specs(cfg: ModelConfig, scan: bool, dtype=jnp.bfloat16,
 
 def stack_apply(params, x, cfg: ModelConfig, positions, mode: str,
                 caches, pos, attn_impl: str, remat: str = "none",
-                enc_out=None, unroll_chunks: bool = False):
+                enc_out=None, unroll_chunks: bool = False,
+                moe_chunks: int = 1):
     """Run the full stack. `params` matches stack_specs' layout (stacked tree
     for scan, list for unrolled). Returns (x, new_caches, aux_total)."""
     kinds = block_kinds(cfg)
@@ -237,7 +239,8 @@ def stack_apply(params, x, cfg: ModelConfig, positions, mode: str,
 
         def f(p_l, xc, cache_l):
             return layer_apply(p_l, xc, cfg, kind, positions, mode, cache_l,
-                               pos, attn_impl, enc_out, unroll_chunks)
+                               pos, attn_impl, enc_out, unroll_chunks,
+                               moe_chunks=moe_chunks)
 
         fw = wrap(f)
 
@@ -268,7 +271,8 @@ def stack_apply(params, x, cfg: ModelConfig, positions, mode: str,
 
         def f(pp, xx, cc, kk=kind):
             return layer_apply(pp, xx, cfg, kk, positions, mode, cc, pos,
-                               attn_impl, enc_out, unroll_chunks)
+                               attn_impl, enc_out, unroll_chunks,
+                               moe_chunks=moe_chunks)
 
         x, new_cache, aux_l = wrap(f)(p_l, x, cache_l)
         aux_total = aux_total + aux_l

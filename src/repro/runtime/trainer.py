@@ -46,7 +46,8 @@ class Trainer:
             grad_clip=run.train.grad_clip)
         self.options = options or ModelOptions(
             attn_impl="dense", scan_layers=run.parallel.scan_layers,
-            remat=run.parallel.remat)
+            remat=run.parallel.remat,
+            moe_a2a_chunks=run.parallel.moe_a2a_chunks)
         self.model = build_model(run.model, self.options)
         self.data = dataset or SyntheticLMDataset(
             vocab_size=run.model.vocab_size, seq_len=run.train.seq_len,

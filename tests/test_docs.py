@@ -93,6 +93,19 @@ def test_render_table_shape():
     assert any("ERROR" in ln for ln in lines)
 
 
+def test_bench_quick_tracks_moe_row():
+    """The committed trajectory must carry the MoE EP suite (PR 7 onward):
+    capacity-chunked a2a_scan (moe_a2a_chunks=2) vs the monolithic
+    dispatch/combine, with the headline ratio gated by ci_gate."""
+    from benchmarks import docs_sync
+
+    quick = docs_sync.load_quick()
+    rows = quick["moe"]["rows"]
+    assert rows, "moe suite lost its rows"
+    assert all(r["metric"] == "steps_per_s" for r in rows), rows
+    assert "hdot_two_phase_ratio" in quick["moe"]
+
+
 def test_bench_quick_tracks_fsdp_row():
     """lm_step's committed trajectory must carry the ZeRO-3 composition row
     (PR 5 onward) so the fsdp/two_phase headline is gated by ci_gate."""

@@ -135,6 +135,26 @@ def test_pair_count_total_and_balance():
     assert any("reverse" in f.message for f in rep.findings)
 
 
+def test_pair_count_a2a_total():
+    """expected_a2a_total pins the MoE EP dispatch/combine count (2Q per
+    traced layer body per direction); a2a is its own transpose so there is
+    no fwd/bwd ring balance to check."""
+    body = """\
+  p0 = f32[16] parameter(0)
+  p1 = f32[16] parameter(1)
+  dispatch = f32[16] all-to-all(p0), channel_id=1, replica_groups={{0,1}}
+  expert = f32[16] multiply(dispatch, dispatch)
+  combine = f32[16] all-to-all(expert), channel_id=2, replica_groups={{0,1}}
+  interior = f32[16] multiply(p1, p1)
+  ROOT r = f32[16] add(combine, interior)"""
+    ok = lint_text(_module(body), LintContext(expected_a2a_total=2))
+    assert ok.ok, ok.render()
+    wrong = lint_text(_module(body), LintContext(expected_a2a_total=4))
+    rep_rules = _rules(wrong)
+    assert "PAIR-COUNT" in rep_rules
+    assert any("all-to-alls" in f.message for f in wrong.findings)
+
+
 def test_bucket_order_reads_channel_ids():
     body = """\
   p0 = f32[23] parameter(0)
