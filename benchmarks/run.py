@@ -7,6 +7,7 @@
   bench_overlap       Fig 1 concept (collective matmul ring)      measured
   lm_step             HDOT grad-sync buckets on an LM step        measured
   lm_moe              MoE EP capacity-chunked a2a vs monolithic   measured
+  serve               continuous batching vs wave serving         measured
 
 Results land in results/bench/*.json + a markdown summary. Run:
   PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
@@ -28,8 +29,8 @@ import json
 import time
 import traceback
 
-from benchmarks import (bench_overlap, hpccg, lm_step, table1_halo_memory,
-                        table2_heat2d, table4_creams)
+from benchmarks import (bench_overlap, hpccg, lm_step, serve,
+                        table1_halo_memory, table2_heat2d, table4_creams)
 from benchmarks._util import REPO, RESULTS, save
 
 SUITES = {
@@ -53,13 +54,14 @@ SUITES = {
         n=1024 if quick else 2048),
     "lm_step": lambda quick: lm_step.run(sizes=(2,) if quick else (2, 8)),
     "lm_moe": lambda quick: lm_step.run_moe(sizes=(2,) if quick else (2, 4)),
+    "serve": lambda quick: serve.run(quick=quick),
 }
 
 
 # suite -> short key in the consolidated BENCH_quick.json record
 QUICK_KEYS = {"table2_heat2d": "heat2d", "table4_creams": "creams",
               "hpccg": "hpccg", "bench_overlap": "overlap",
-              "lm_step": "lm_step", "lm_moe": "moe"}
+              "lm_step": "lm_step", "lm_moe": "moe", "serve": "serve"}
 
 
 def _schedule_rates(row: dict):
@@ -68,7 +70,8 @@ def _schedule_rates(row: dict):
     are inverted to a rate so bigger is always better."""
     if "two_phase" not in row:
         return None
-    key = next((k for k in ("sweeps_per_s", "steps_per_s", "iters_per_s")
+    key = next((k for k in ("sweeps_per_s", "steps_per_s", "iters_per_s",
+                            "tokens_per_s")
                 if k in row["two_phase"]), None)
     if key is not None:
         return key, row["two_phase"][key], row["hdot"][key]

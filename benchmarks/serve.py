@@ -1,0 +1,167 @@
+"""Serving bench: continuous batching vs wave scheduling on one trace.
+
+Both schedulers share the BatchServer cache layout and the same seeded
+Poisson arrival trace at saturating load (arrivals far faster than service,
+so the queue never starves and the comparison is pure scheduling). Requests
+carry a skewed max_new mix (short and long interleaved): the wave scheduler
+pays max(max_new) decode steps for every request in a wave, while the
+continuous scheduler re-admits into a slot the step it frees — the
+structural margin the bench asserts (`continuous strictly more tokens/s`).
+
+Rows reuse the repo-wide two-schedule record shape — `two_phase` = wave
+(serial phases: batch, then decode to the slowest member), `hdot` =
+continuous (admission rides along with decode) — so run.py's quick record
+and ci_gate.py gate the continuous/wave ratio exactly like the overlap
+suites. Latency is measured per token from Poisson arrival to the server's
+`Request.finish` stamp (p50/p99 across requests).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Any, Dict, List
+
+
+def _trace(n: int, rate: float, plen: int, seed: int):
+    """Seeded Poisson arrivals + fixed-width prompts + skewed max_new mix.
+    Returns (arrive_s, prompts, max_new); identical for both schedulers."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    arrive = np.cumsum(rng.exponential(1.0 / rate, n))
+    prompts = rng.integers(1, 1000, size=(n, plen)).tolist()
+    max_new = [2 if i % 2 == 0 else 24 for i in range(n)]
+    return arrive, prompts, max_new
+
+
+def _requests(prompts, max_new) -> List[Any]:
+    from repro.runtime.server import Request
+
+    return [Request(prompt=list(p), max_new_tokens=m)
+            for p, m in zip(prompts, max_new)]
+
+
+def _latencies_ms(reqs, t0, arrive) -> List[float]:
+    """Per-token latency (ms) of each request: Poisson arrival -> finish."""
+    return [(r.finish - (t0 + a)) * 1e3 / len(r.output)
+            for r, a in zip(reqs, arrive)]
+
+
+def _serve_wave(srv, reqs, arrive) -> float:
+    """Replay the trace under wave scheduling. Waves are gated on a full
+    batch (or the drained tail) so every wave keeps the compiled b=slots
+    shape — the strongest (recompile-free) version of the wave baseline."""
+    t0 = time.monotonic()
+    i = 0
+    while i < len(reqs) or srv.queue:
+        now = time.monotonic() - t0
+        while i < len(reqs) and arrive[i] <= now:
+            srv.submit(reqs[i])
+            i += 1
+        if len(srv.queue) >= srv.slots or (i == len(reqs) and srv.queue):
+            srv.run_wave()
+        else:
+            time.sleep(2e-4)
+    return t0
+
+
+def _serve_continuous(srv, reqs, arrive) -> float:
+    t0 = time.monotonic()
+    state = {"i": 0}
+
+    def poll():
+        now = time.monotonic() - t0
+        while state["i"] < len(reqs) and arrive[state["i"]] <= now:
+            srv.submit(reqs[state["i"]])
+            state["i"] += 1
+        return state["i"] < len(reqs)
+
+    srv.run_continuous(poll)
+    return t0
+
+
+def worker(devices: int, requests: int, slots: int, rate: float,
+           seed: int) -> Dict[str, Any]:
+    import dataclasses
+
+    import numpy as np
+
+    from repro.config.registry import get_arch
+    from repro.models.model import ModelOptions, build_model, init_params
+    from repro.runtime.server import BatchServer
+
+    cfg = dataclasses.replace(get_arch("internlm2-1.8b").reduced(),
+                              num_layers=2)
+    model = build_model(cfg, ModelOptions(attn_impl="dense"))
+    params = init_params(cfg, seed=0)
+    plen, max_len = 4, 32
+    arrive, prompts, max_new = _trace(requests, rate, plen, seed)
+
+    out: Dict[str, Any] = {"devices": devices, "arch": cfg.name,
+                           "slots": slots, "requests": requests,
+                           "offered_req_per_s": rate, "seed": seed}
+    runners = {"two_phase": ("wave", _serve_wave),
+               "hdot": ("continuous", _serve_continuous)}
+    for key, (name, serve) in runners.items():
+        srv = BatchServer(model, params, slots=slots, max_len=max_len)
+        # warmup: one full batch through the scheduler pays every jit
+        # compile (prefill/admit at the trace's fixed plen + decode step)
+        warm = _requests(prompts[:slots], [2] * slots)
+        serve(srv, warm, np.zeros(slots))
+        steps0 = srv.stats["decode_steps"]
+
+        reqs = _requests(prompts, max_new)
+        t0 = serve(srv, reqs, arrive)
+        seconds = time.monotonic() - t0
+        assert all(r.output is not None and r.finish is not None
+                   for r in reqs)
+        toks = sum(len(r.output) for r in reqs)
+        lat = _latencies_ms(reqs, t0, arrive)
+        out[key] = {"scheduler": name, "seconds": seconds,
+                    "tokens_per_s": toks / seconds, "tokens": toks,
+                    "decode_steps": srv.stats["decode_steps"] - steps0,
+                    "p50_ms_per_token": float(np.percentile(lat, 50)),
+                    "p99_ms_per_token": float(np.percentile(lat, 99))}
+
+    # the acceptance bar: at saturating load the continuous scheduler must
+    # strictly beat the wave scheduler on delivered tokens/s
+    assert out["hdot"]["tokens_per_s"] > out["two_phase"]["tokens_per_s"], out
+    return out
+
+
+def run(quick: bool = True) -> Dict[str, Any]:
+    from benchmarks._util import run_worker
+
+    n = 16 if quick else 48
+    rows = [run_worker("benchmarks.serve", 1,
+                       ["--requests", str(n), "--slots", "4",
+                        "--rate", "200.0", "--seed", "0"])]
+    return {"table": "Serving schedulers (continuous vs wave)", "rows": rows}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--rate", type=float, default=200.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.worker:
+        from benchmarks._util import emit
+
+        emit(worker(args.devices, args.requests, args.slots, args.rate,
+                    args.seed))
+        return
+    rec = run()
+    for r in rec["rows"]:
+        print(f"slots={r['slots']} requests={r['requests']} "
+              f"wave: {r['two_phase']['tokens_per_s']:.1f} tok/s "
+              f"(p99 {r['two_phase']['p99_ms_per_token']:.1f} ms/tok), "
+              f"continuous: {r['hdot']['tokens_per_s']:.1f} tok/s "
+              f"(p99 {r['hdot']['p99_ms_per_token']:.1f} ms/tok)")
+
+
+if __name__ == "__main__":
+    main()

@@ -482,6 +482,60 @@ def _lm_moe_ep() -> Target:
     return _lm_moe_grad_target("lm_moe_ep", 2)
 
 
+def _decode_tp_target(name: str, mode: str) -> Target:
+    """One TP-sharded continuous-batching decode step (models.decode_tp —
+    the `BatchServer(decode_step_fn=...)` cell) on a (1 data x 2 model)
+    mesh: 4L+1 collective-matmul rings (fused QKV ag, wo rs, fused gate|up
+    ag, down rs per layer, plus the unembed ag), per-slot ring caches
+    donated.
+
+    `scalar_elements` is raised to 128 so the per-slot bookkeeping — cache
+    `pos` compares / causal masks (slots*w = 128 elements here) and the rope
+    angle tables ((slots, 1, hd/2) = 128) — neither counts as an overlap
+    window nor as sized traffic; only ring-piece-scale matmul output
+    (>= 256 elements) can hide a ppermute, which is exactly the chunk
+    compute the hdot schedule creates. Cache writes are per-row
+    dynamic-update-slices (NOT scatters) for the same reason — assembling a
+    block is not compute (analysis/hlo_ir.COMPUTE_OPS), so the two-phase
+    fixture cannot borrow an overlap window from its own cache updates.
+    """
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.config.registry import get_arch
+    from repro.launch.mesh import make_mesh
+    from repro.models.decode_tp import build_decode_step, expected_permute_total
+    from repro.models.model import ModelOptions, build_model
+    from repro.runtime.server import make_slot_caches
+
+    cfg = get_arch("qwen3-8b").reduced()     # dense GQA + qk-norm
+    model = build_model(cfg, ModelOptions(attn_impl="dense"))
+    mesh = make_mesh((1, 2), ("data", "model"))
+    slots, max_len = 8, 16
+    jitted = jax.jit(build_decode_step(model, mesh, mode=mode),
+                     donate_argnums=(2,))
+    pspec = model.abstract_params()
+    cspec = jax.eval_shape(
+        functools.partial(make_slot_caches, model, slots, max_len))
+    tok = jax.ShapeDtypeStruct((slots, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((slots,), jnp.int32)
+    txt = _pre_opt_text(jitted, pspec, tok, cspec, pos)
+    expected = (expected_permute_total(cfg, slots, 1, 2)
+                if mode == "hdot" else 0)
+    ctx = LintContext(target=name, expected_permute_total=expected,
+                      max_exposed_collectives=0, expect_donation=True,
+                      scalar_elements=128)
+    return Target(name, txt, ctx)
+
+
+@target("lm_decode_tp")
+def _lm_decode_tp() -> Target:
+    """TP continuous-decode step: (4L+1) hdot rings, zero exposed permutes."""
+    return _decode_tp_target("lm_decode_tp", "hdot")
+
+
 # ------------------------------------------------- mutation fixtures
 @broken("broken_unpeeled_halo1d")
 def _broken_unpeeled() -> Target:
@@ -550,6 +604,17 @@ def _broken_two_phase_heat2d() -> Target:
     txt = _pre_opt_text(f, jax.ShapeDtypeStruct((32, 32), jnp.float32))
     return Target("broken_two_phase_heat2d", txt,
                   LintContext(target="broken_two_phase_heat2d"))
+
+
+@broken("broken_two_phase_decode_tp")
+def _broken_two_phase_decode_tp() -> Target:
+    """Two-phase TP decode: serial all_gather / psum_scatter walls around
+    every projection matmul — GSPMD's schedule. Every sized op is an
+    ancestor or descendant of the collective next to it (the per-row cache
+    DUS writes don't count as compute), so NO-OVERLAP-WINDOW fires on each
+    wall; the pair count (0 permutes) stays green so the failure is
+    attributed to the schedule shape, not a miscount."""
+    return _decode_tp_target("broken_two_phase_decode_tp", "two_phase")
 
 
 @broken("broken_monolithic_a2a_moe")

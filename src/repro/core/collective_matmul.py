@@ -131,6 +131,17 @@ def matmul_rs_hdot(h: jax.Array, v: jax.Array, axis_name: str,
     return jnp.concatenate(accs, axis=0)
 
 
+def ring_permute_count(s_loc: int, n: int, bidirectional: bool = True,
+                       chunks: Optional[int] = None) -> int:
+    """ppermutes one hdot ring issues: pieces x (n - 1), both directions.
+    The PAIR-COUNT lint expectations (analysis/lint_targets) call this so
+    they derive from the same `_ring_pieces` split the runtime unrolls —
+    changing the chunk policy moves the lint bar with it."""
+    if n == 1:
+        return 0
+    return len(_ring_pieces(s_loc, bidirectional, chunks)) * (n - 1)
+
+
 # ---------------------------------------------------------------- dispatchers
 def ag_matmul(x: jax.Array, w: jax.Array, axis_name: str, mode: str = "hdot",
               chunks: Optional[int] = None) -> jax.Array:

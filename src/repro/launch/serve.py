@@ -1,8 +1,11 @@
-"""Serving launcher: batched prefill+decode waves over a reduced config.
+"""Serving launcher: batched prefill+decode over a reduced config.
 
-Demonstrates the serve_step lowered by the decode_* dry-run shapes actually
-running (reduced sizes, CPU). Production-scale serving lowers the identical
-step via launch.steps.build_cell — the dry-run proves those shardings.
+``--scheduler continuous`` (default) runs true continuous batching
+(token-granular slot re-admission, runtime/server.py:run_continuous);
+``--scheduler wave`` runs the static wave baseline. Demonstrates the
+serve_step lowered by the decode_* dry-run shapes actually running (reduced
+sizes, CPU). Production-scale serving lowers the identical step via
+launch.steps.build_cell — the dry-run proves those shardings.
 """
 from __future__ import annotations
 
@@ -20,6 +23,10 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--scheduler", choices=("continuous", "wave"),
+                    default="continuous",
+                    help="continuous = token-granular slot re-admission; "
+                         "wave = static batches decoded to the slowest member")
     args = ap.parse_args(argv)
 
     from repro.config.registry import get_arch
@@ -35,11 +42,16 @@ def main(argv: Optional[list] = None) -> int:
     for i in range(args.requests):
         prompt = rng.integers(1, cfg.vocab_size, args.prompt_len).tolist()
         server.submit(Request(prompt=prompt, max_new_tokens=args.max_new))
-    served = server.run_all()
+    if args.scheduler == "continuous":
+        served = server.run_continuous()
+    else:
+        served = server.run_all()
     for i, r in enumerate(served):
         print(f"[serve] req{i:02d} -> {len(r.output)} tokens: {r.output[:8]}...")
-    print(f"[serve] served {len(served)} requests in "
-          f"{int(np.ceil(args.requests / args.slots))} waves")
+    how = (f"{server.stats['decode_steps']} decode steps"
+           if args.scheduler == "continuous"
+           else f"{server.stats['waves']} waves")
+    print(f"[serve] served {len(served)} requests ({args.scheduler}: {how})")
     return 0
 
 

@@ -218,16 +218,20 @@ def prefill_attention(p, x, cfg: ModelConfig, positions, cache: Cache,
 def decode_attention(p, x, cfg: ModelConfig, cache: Cache, pos: jax.Array,
                      window=None) -> Tuple[jax.Array, Cache]:
     """One-token step against the ring cache. `pos` is a scalar int32 (same
-    position for every sequence in the batch).
+    position for every sequence in the batch — the wave scheduler) or a
+    per-slot (b,) vector (continuous batching: every slot decodes at its own
+    position; the cache then carries a per-slot ``pos`` of shape (b, w)).
 
-    Under a multi-chip sharding context this dispatches to the shard_map
-    flash-decode: the KV domain stays sequence-sharded, each chip computes a
-    partial softmax over its subdomain and the results combine hierarchically
-    (max + scaled sums) — the HDOT task-reduction pattern. Without it, GSPMD
-    all-gathers the whole cache every token (measured 1.02 GB/chip/layer for
-    granite decode_32k — EXPERIMENTS §Perf cell C)."""
+    Under a multi-chip sharding context the scalar-pos path dispatches to the
+    shard_map flash-decode: the KV domain stays sequence-sharded, each chip
+    computes a partial softmax over its subdomain and the results combine
+    hierarchically (max + scaled sums) — the HDOT task-reduction pattern.
+    Without it, GSPMD all-gathers the whole cache every token (measured
+    1.02 GB/chip/layer for granite decode_32k — EXPERIMENTS §Perf cell C).
+    The per-slot path is TP-sharded explicitly by models/decode_tp instead."""
     b = x.shape[0]
-    positions = jnp.broadcast_to(pos, (b, 1))
+    per_slot = jnp.ndim(pos) == 1
+    positions = pos[:, None] if per_slot else jnp.broadcast_to(pos, (b, 1))
     q = project_q(p, x, cfg, positions)
     k, v = project_kv(p, x, cfg, positions)
 
@@ -245,7 +249,7 @@ def decode_attention(p, x, cfg: ModelConfig, cache: Cache, pos: jax.Array,
     n_shards = 1
     for a in kv_axes:
         n_shards *= ctx.axis_size(a)
-    if kv_axes and n_shards > 1 and w % n_shards == 0:
+    if kv_axes and n_shards > 1 and w % n_shards == 0 and not per_slot:
         out, new_cache = _flash_decode_sharded(q, k, v, cache, pos, window,
                                                ctx, kv_axes)
     else:
@@ -257,17 +261,29 @@ def decode_attention(p, x, cfg: ModelConfig, cache: Cache, pos: jax.Array,
 
 def _decode_dense(q, k, v, cache: Cache, pos, window) -> Tuple[jax.Array, Cache]:
     """Single-device reference decode path (also the oracle for the sharded
-    flash-decode in tests)."""
+    flash-decode in tests). Scalar `pos` updates one shared ring slot; a
+    per-slot (b,) `pos` scatters row-wise into a per-slot (b, w) ring."""
     b = q.shape[0]
     w = cache["k"].shape[1]
-    positions = jnp.broadcast_to(pos, (b, 1))
-    slot = pos % w
-    ck = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, 1)
-    cv = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, 1)
-    cpos = lax.dynamic_update_slice_in_dim(cache["pos"],
-                                           jnp.reshape(pos, (1,)).astype(jnp.int32), slot, 0)
-    k_pos = jnp.broadcast_to(cpos, (b, w))
-    kv_valid = jnp.broadcast_to(cpos >= 0, (b, w))
+    if jnp.ndim(pos) == 1:
+        # continuous batching: each slot writes its own ring position
+        positions = pos[:, None]
+        slot = (pos % w).astype(jnp.int32)
+        rows = jnp.arange(b)
+        ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+        cpos = cache["pos"].at[rows, slot].set(pos.astype(jnp.int32))
+        k_pos = cpos                                            # (b, w)
+        kv_valid = cpos >= 0
+    else:
+        positions = jnp.broadcast_to(pos, (b, 1))
+        slot = pos % w
+        ck = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, 1)
+        cv = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, 1)
+        cpos = lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.reshape(pos, (1,)).astype(jnp.int32), slot, 0)
+        k_pos = jnp.broadcast_to(cpos, (b, w))
+        kv_valid = jnp.broadcast_to(cpos >= 0, (b, w))
     out = _sdpa_dense(q, ck, cv, positions, k_pos, causal=True, window=window,
                       kv_valid=kv_valid)
     return out, {"k": ck, "v": cv, "pos": cpos}

@@ -159,7 +159,10 @@ class LanguageModel:
             x = self._prepend_frontend(params, x, batch)
         b, s, _ = x.shape
         if mode == "decode":
-            positions = jnp.broadcast_to(pos, (b, 1))
+            # scalar pos: every slot at the same position (wave scheduler);
+            # (b,) pos: per-slot positions (continuous batching)
+            positions = pos[:, None] if jnp.ndim(pos) == 1 \
+                else jnp.broadcast_to(pos, (b, 1))
         else:
             positions = jnp.broadcast_to(jnp.arange(s), (b, s))
         x = with_logical(x, ("batch", "seq", None) if mode != "decode"

@@ -1,20 +1,33 @@
 """Batched serving runtime: prefill + iterative decode over slot-batched
-caches (wave-scheduled continuous batching).
+caches, under two schedulers sharing one cache layout.
 
-Requests are padded into fixed `slots`; a wave = one prefill of all waiting
-prompts + a decode loop until every slot finishes (EOS or max_new_tokens).
-Slot-level cache surgery (true token-granular continuous batching) drops into
-the same cache layout — the wave scheduler is the simplest policy that keeps
-the decode step shape static for XLA.
+``run_wave`` is the static policy: pad up to `slots` waiting prompts into one
+prefill, decode with a single shared position until every slot finishes.
+
+``run_continuous`` is true continuous batching: the moment a slot frees (EOS
+or max_new_tokens) the next queued request is admitted into it — an
+exact-width batch-1 prefill plus slot-level cache surgery
+(`dynamic_update_slice` of that slot's rows into the live caches), while the
+decode step itself stays one static-shape jitted program over all `slots`
+with a per-slot position vector. Because admission prefills at the exact
+prompt width (no padding enters attention) and replaces the slot's cache rows
+wholesale, every request's outputs are bit-identical to serving it alone on a
+1-slot server (tests/test_server.py locks this).
+
+The decode step can be swapped out (``decode_step_fn``) for the TP-sharded
+cell in models/decode_tp, which routes every projection/FFN matmul through
+the HDOT collective matmuls.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional
+import time
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.models.model import LanguageModel
 
@@ -27,11 +40,72 @@ class Request:
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
     output: Optional[List[int]] = None
+    # set by the server: submission id (also the non-greedy sampling stream
+    # id, so outputs are independent of arrival interleaving) and the
+    # monotonic completion timestamp (serving-latency benchmarks)
+    rid: Optional[int] = None
+    finish: Optional[float] = None
+
+
+# ------------------------------------------------------- slot-cache surgery
+def _is_pos_path(path) -> bool:
+    last = path[-1]
+    return getattr(last, "key", None) == "pos"
+
+
+def make_slot_caches(model: LanguageModel, slots: int, max_len: int) -> PyTree:
+    """Decode caches for the continuous scheduler: the shared per-batch
+    ``pos`` ring index (w,) becomes per-slot (slots, w), initialized to -1
+    (= empty; `init_caches` zero-fill would claim position 0 as attended)."""
+    caches = model.init_caches(slots, max_len)
+
+    def fix(path, leaf):
+        if _is_pos_path(path):
+            return jnp.full(leaf.shape[:-1] + (slots, leaf.shape[-1]), -1,
+                            jnp.int32)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, caches)
+
+
+def _mark_prefill_tail(caches: PyTree, plen: int) -> PyTree:
+    """A prompt shorter than the ring leaves the ``pos`` tail at its init
+    value (0 = "position 0, attended") — mark everything past the prompt as
+    empty. No-op for prompts that filled/wrapped the ring (the s >= w prefill
+    path already -1-fills)."""
+
+    def fix(path, leaf):
+        if _is_pos_path(path):
+            w = leaf.shape[-1]
+            return jnp.where(jnp.arange(w) < plen, leaf, -1)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, caches)
+
+
+def _scatter_slot(dst: PyTree, src: PyTree, slot: jax.Array, slots: int
+                  ) -> PyTree:
+    """Write a batch-1 prefill cache into row `slot` of the server caches.
+    Per-slot ``pos`` leaves gain the slot axis at -2; every other leaf
+    already carries the slot batch axis and is replaced row-wise."""
+
+    def one(d, s):
+        s = s.astype(d.dtype)
+        if d.ndim == s.ndim + 1:
+            ax = d.ndim - 2
+            return lax.dynamic_update_slice_in_dim(
+                d, jnp.expand_dims(s, ax), slot, ax)
+        ax = next(i for i, (ds_, ss_) in enumerate(zip(d.shape, s.shape))
+                  if ss_ == 1 and ds_ == slots)
+        return lax.dynamic_update_slice_in_dim(d, s, slot, ax)
+
+    return jax.tree.map(one, dst, src)
 
 
 class BatchServer:
     def __init__(self, model: LanguageModel, params: PyTree, slots: int = 8,
-                 max_len: int = 1024, greedy: bool = True, seed: int = 0):
+                 max_len: int = 1024, greedy: bool = True, seed: int = 0,
+                 decode_step_fn: Optional[Callable] = None):
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
         if max_len < 1:
@@ -42,12 +116,19 @@ class BatchServer:
         self.max_len = max_len
         self.greedy = greedy
         self.key = jax.random.PRNGKey(seed)
+        self._base_key = jax.random.PRNGKey(seed)
         self.queue: List[Request] = []
+        self.stats: Dict[str, int] = {"decode_steps": 0, "prefills": 0,
+                                      "waves": 0, "admitted": 0}
+        self._next_rid = 0
         # cache capacity must cover prompt + generation, else generated
         # tokens evict the prompt from the ring (model.prefill docstring)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, max_len=self.max_len))
         self._decode = jax.jit(model.decode_step)
+        self._decode_step_fn = decode_step_fn
+        self._cont: Optional[Dict[str, Any]] = None
+        self._admit_fns: Dict[int, Callable] = {}
 
     def submit(self, req: Request) -> None:
         if not req.prompt:
@@ -62,6 +143,9 @@ class BatchServer:
                 f"({req.max_new_tokens}) = {need} exceeds the server's "
                 f"cache capacity max_len={self.max_len}; generated tokens "
                 f"would evict the prompt from the ring cache")
+        if req.rid is None:
+            req.rid = self._next_rid
+            self._next_rid += 1
         self.queue.append(req)
 
     def _pad_prompts(self, reqs: List[Request]) -> np.ndarray:
@@ -72,6 +156,7 @@ class BatchServer:
             toks[i, width - len(r.prompt):] = r.prompt  # left-pad
         return toks
 
+    # ------------------------------------------------------- wave scheduler
     def run_wave(self) -> List[Request]:
         """Serve up to `slots` queued requests to completion."""
         if not self.queue:
@@ -80,6 +165,8 @@ class BatchServer:
         toks = self._pad_prompts(reqs)
         b, plen = toks.shape
         logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        self.stats["prefills"] += 1
+        self.stats["waves"] += 1
         max_new = max(r.max_new_tokens for r in reqs)
         outputs = [[] for _ in reqs]
         done = np.zeros(b, bool)
@@ -93,10 +180,12 @@ class BatchServer:
                     if ((r.eos_id is not None and t == r.eos_id)
                             or len(outputs[i]) >= r.max_new_tokens):
                         done[i] = True
+                        r.finish = time.monotonic()
             if done.all():
                 break
             logits, caches = self._decode(self.params, token, caches,
                                           jnp.asarray(pos, jnp.int32))
+            self.stats["decode_steps"] += 1
             token = self._sample(logits)
             pos += 1
         for r, out in zip(reqs, outputs):
@@ -114,3 +203,127 @@ class BatchServer:
             return jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
         self.key, k = jax.random.split(self.key)
         return jax.random.categorical(k, logits[:, -1, :])[:, None].astype(jnp.int32)
+
+    # ------------------------------------------------- continuous scheduler
+    def run_continuous(self, poll: Optional[Callable[[], bool]] = None
+                       ) -> List[Request]:
+        """Token-granular continuous batching: serve the queue to completion,
+        admitting a queued request into a slot the same step it frees.
+
+        `poll`, if given, is called once per scheduler iteration; it may
+        submit new requests and returns True while more arrivals may still
+        come (the benchmark's Poisson trace) — the loop then idles instead of
+        returning when the queue drains.
+        """
+        if self.model.cfg.family in ("vlm", "encdec"):
+            raise NotImplementedError(
+                "continuous batching admits via token-only prefill; family "
+                f"{self.model.cfg.family!r} needs frontend inputs per request")
+        self._ensure_continuous_state()
+        st = self._cont
+        served: List[Request] = []
+        while True:
+            more = bool(poll()) if poll is not None else False
+            # token-granular admission: fill every free slot from the queue
+            for s in range(self.slots):
+                if st["req"][s] is not None:
+                    continue
+                while self.queue:
+                    req = self.queue.pop(0)
+                    tok = self._admit(req, s)
+                    req.output = [tok]
+                    if self._finished(req, tok):
+                        # EOS or max_new_tokens=1 on the first sampled token:
+                        # the slot is still free — admit the next request now
+                        req.finish = time.monotonic()
+                        served.append(req)
+                        continue
+                    st["req"][s] = req
+                    st["tok"][s] = tok
+                    st["pos"][s] = len(req.prompt)
+                    break
+            active = [i for i in range(self.slots) if st["req"][i] is not None]
+            if not active:
+                if self.queue:
+                    continue
+                if more:
+                    time.sleep(5e-4)
+                    continue
+                break
+            # one static-shape decode step over ALL slots; idle rows carry
+            # stale token/pos and only ever write their own cache rows, which
+            # admission replaces wholesale
+            logits, st["caches"] = self._decode_cont(
+                self.params, jnp.asarray(st["tok"][:, None]), st["caches"],
+                jnp.asarray(st["pos"]))
+            self.stats["decode_steps"] += 1
+            rows = np.asarray(logits)[:, -1, :]
+            st["pos"] += 1
+            for i in active:
+                r = st["req"][i]
+                t = self._sample_row(rows[i], r)
+                r.output.append(t)
+                st["tok"][i] = t
+                if self._finished(r, t):
+                    r.finish = time.monotonic()
+                    served.append(r)
+                    st["req"][i] = None  # freed: next iteration admits here
+        return served
+
+    def _finished(self, req: Request, tok: int) -> bool:
+        return ((req.eos_id is not None and tok == req.eos_id)
+                or len(req.output) >= req.max_new_tokens)
+
+    def _sample_row(self, row: np.ndarray, req: Request) -> int:
+        """Sample one token for one slot. Non-greedy keys are derived from
+        (request id, #generated) — NOT from a shared split sequence — so the
+        sampled stream is identical however arrivals interleave."""
+        if self.greedy:
+            return int(np.argmax(row))
+        n = 0 if req.output is None else len(req.output)
+        k = jax.random.fold_in(
+            jax.random.fold_in(self._base_key, req.rid), n)
+        return int(jax.random.categorical(k, jnp.asarray(row)))
+
+    def _ensure_continuous_state(self) -> None:
+        if self._cont is not None:
+            return
+        decode = self._decode_step_fn or self.model.decode_step
+        self._decode_cont = jax.jit(decode, donate_argnums=(2,))
+        self._cont = {
+            "caches": make_slot_caches(self.model, self.slots, self.max_len),
+            "req": [None] * self.slots,
+            "tok": np.zeros(self.slots, np.int32),
+            "pos": np.zeros(self.slots, np.int32),
+        }
+
+    def _admit(self, req: Request, slot: int) -> int:
+        """Prefill `req` at its exact prompt width (batch 1, no padding — the
+        outputs stay bit-identical to a solo server) and scatter the prefill
+        cache into the freed slot's rows; returns the first sampled token."""
+        plen = len(req.prompt)
+        fn = self._admit_fns.get(plen)
+        if fn is None:
+            fn = self._build_admit(plen)
+            self._admit_fns[plen] = fn
+        toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
+        logits, self._cont["caches"] = fn(
+            self.params, toks, self._cont["caches"],
+            jnp.asarray(slot, jnp.int32))
+        self.stats["prefills"] += 1
+        self.stats["admitted"] += 1
+        row = np.asarray(logits)[0, -1]
+        return self._sample_row(row, req)
+
+    def _build_admit(self, plen: int) -> Callable:
+        """One jitted admission program per distinct prompt length: exact-
+        width prefill + pos-tail fix + slot cache surgery, caches donated."""
+        model, slots, max_len = self.model, self.slots, self.max_len
+
+        def admit(params, tokens, caches, slot):
+            logits, pc = model.prefill(params, {"tokens": tokens},
+                                       max_len=max_len)
+            pc = _mark_prefill_tail(pc, plen)
+            return logits, _scatter_slot(caches, pc, slot, slots)
+
+        return jax.jit(admit, donate_argnums=(2,))

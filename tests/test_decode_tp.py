@@ -1,0 +1,149 @@
+"""TP-sharded continuous decode (models.decode_tp) vs the 1-device oracle.
+
+The TP cell must be a pure schedule change: same greedy tokens as the plain
+`model.decode_step` continuous server. The comparison runs in f32 — the ring
+reduce-scatter reassociates the cross-rank partial sums, which in bf16 is a
+1-ulp perturbation per layer, enough to flip near-tie argmaxes; in f32 the
+drift (~1e-6 relative) is orders of magnitude below any logit margin, so
+greedy outputs are token-exact and the assertion is deterministic.
+
+The lint half mirrors tests/test_moe_ep.py: the canonical `lm_decode_tp`
+target must pass every rule at max_exposed_collectives=0 (PAIR-COUNT pins
+(4L+1) rings x 2 permutes), while the two-phase fixture must trip exactly
+NO-OVERLAP-WINDOW.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def run_devices(code: str, devices: int, timeout: int = 600) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_decode_tp_matches_oracle_4dev():
+    """(2 data x 2 model) mesh, 6 requests through 4 slots with refills:
+    token-exact greedy agreement with the single-device continuous server,
+    including non-trivial slot admission mid-stream."""
+    code = """
+    import dataclasses, json
+    import jax.numpy as jnp
+    from repro.config.registry import get_arch
+    from repro.launch.mesh import make_mesh
+    from repro.models.decode_tp import build_decode_step
+    from repro.models.model import ModelOptions, build_model, init_params
+    from repro.runtime.server import BatchServer, Request
+
+    cfg = dataclasses.replace(get_arch("qwen3-8b").reduced(), num_layers=2)
+    opts = ModelOptions(attn_impl="dense", dtype=jnp.float32)
+    model = build_model(cfg, opts)
+    params = init_params(cfg, seed=0, options=opts)
+    step = build_decode_step(model, make_mesh((2, 2), ("data", "model")))
+
+    prompts = [[5, 9, 3], [7, 1], [2, 2, 2, 2, 8], [11], [4, 6], [1, 2, 3]]
+    maxnew = [4, 6, 2, 1, 5, 3]
+
+    def outputs(decode_fn):
+        srv = BatchServer(model, params, slots=4, max_len=16,
+                          decode_step_fn=decode_fn)
+        for p, m in zip(prompts, maxnew):
+            srv.submit(Request(prompt=list(p), max_new_tokens=m))
+        return {r.rid: r.output for r in srv.run_continuous()}
+
+    oracle, tp = outputs(None), outputs(step)
+    print(json.dumps({
+        "served": len(tp),
+        "token_exact": oracle == tp,
+    }))
+    """
+    r = run_devices(code, 4)
+    assert r["served"] == 6, r
+    assert r["token_exact"], r
+
+
+@pytest.mark.slow
+def test_decode_tp_lint_target_and_two_phase_fixture():
+    """lm_decode_tp lints clean at zero exposed collectives — PAIR-COUNT
+    pins the (4L+1)*pieces*(tp-1) ring permutes derived from the runtime's
+    own `ring_permute_count` — while the two-phase fixture (serial
+    all_gather/psum_scatter walls) trips exactly NO-OVERLAP-WINDOW, with its
+    pair count (0 permutes) green so the failure is the schedule shape."""
+    code = """
+    import json
+    from repro.analysis.hlo_lint import lint_target
+    rep = lint_target("lm_decode_tp")
+    broken = lint_target("broken_two_phase_decode_tp")
+    rules = {f.rule for f in broken.errors}
+    print(json.dumps({
+        "canonical_ok": rep.ok,
+        "two_phase_window_caught": "NO-OVERLAP-WINDOW" in rules,
+        "two_phase_pair_count_green": "PAIR-COUNT" not in rules,
+    }))
+    """
+    r = run_devices(code, 2)
+    assert all(r.values()), r
+
+
+# ------------------------------------------------ fast validation (no mesh)
+class _StubMesh:
+    """build_decode_step validates divisibility from mesh.shape alone, before
+    any device is touched."""
+
+    def __init__(self, dp: int, tp: int):
+        self.shape = {"data": dp, "model": tp}
+
+
+def _model(arch="qwen3-8b", family_override=None):
+    import dataclasses
+
+    from repro.config.registry import get_arch
+    from repro.models.model import ModelOptions, build_model
+
+    cfg = get_arch(arch).reduced()
+    if family_override:
+        cfg = dataclasses.replace(cfg, family=family_override)
+    return build_model(cfg, ModelOptions(attn_impl="dense"))
+
+
+def test_decode_tp_rejects_indivisible_heads():
+    from repro.models.decode_tp import build_decode_step
+
+    with pytest.raises(ValueError, match="heads"):
+        build_decode_step(_model(), _StubMesh(1, 3))   # 4 q / 2 kv vs tp=3
+
+
+def test_decode_tp_rejects_non_dense_family():
+    from repro.models.decode_tp import build_decode_step
+
+    with pytest.raises(ValueError, match="dense family"):
+        build_decode_step(_model("qwen3-moe-30b-a3b"), _StubMesh(1, 2))
+
+
+def test_expected_permutes_derive_from_ring_pieces():
+    """The lint arithmetic must move with the runtime's chunk policy."""
+    from repro.core.collective_matmul import ring_permute_count
+    from repro.models.decode_tp import expected_permute_total
+
+    cfg = _model().cfg                                  # L = 4
+    # slots=8, dp=1, tp=2: s_sp=4 -> 2 bidirectional pieces x 1 hop
+    assert ring_permute_count(4, 2) == 2
+    assert expected_permute_total(cfg, 8, 1, 2) == (4 * 4 + 1) * 2
+    assert expected_permute_total(cfg, 8, 1, 2, chunks=4) == (4 * 4 + 1) * 4
+    assert ring_permute_count(4, 1) == 0                # tp=1: no rings

@@ -106,6 +106,27 @@ def test_bench_quick_tracks_moe_row():
     assert "hdot_two_phase_ratio" in quick["moe"]
 
 
+def test_bench_quick_tracks_serve_row():
+    """The committed trajectory must carry the serving suite (PR 8 onward):
+    continuous batching (hdot) vs wave scheduling (two_phase) tokens/s on
+    the same Poisson trace, with the ratio gated by ci_gate. The benchmark
+    itself asserts continuous > wave; the committed row must agree."""
+    from benchmarks import docs_sync
+
+    quick = docs_sync.load_quick()
+    rows = quick["serve"]["rows"]
+    assert rows, "serve suite lost its rows"
+    assert all(r["metric"] == "tokens_per_s" for r in rows), rows
+    assert quick["serve"]["hdot_two_phase_ratio"] > 1.0, quick["serve"]
+
+
+def test_overlap_doc_covers_serving():
+    text = (REPO / "docs" / "overlap.md").read_text()
+    for ref in ("run_continuous", "decode_step_fn", "build_decode_step",
+                "lm_decode_tp"):
+        assert ref in text, f"docs/overlap.md lost {ref}"
+
+
 def test_bench_quick_tracks_fsdp_row():
     """lm_step's committed trajectory must carry the ZeRO-3 composition row
     (PR 5 onward) so the fsdp/two_phase headline is gated by ci_gate."""
