@@ -41,7 +41,7 @@ def worker(devices: int, n: int, iters: int,
             grid = [n * p for p in parts]
     else:
         mesh = make_mesh((devices,), ("data",))
-        axis = "data"
+        axis = ("data",)
         grid = [n, n, n * devices]
     key = jax.random.PRNGKey(0)
     b = jax.random.normal(key, tuple(grid), jnp.float32)

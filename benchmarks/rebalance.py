@@ -1,0 +1,91 @@
+"""Dynamic load balancing: skewed-cost Heat2D drill, static vs re-cut.
+
+The live straggler drill from :mod:`repro.runtime.rebalance`: `workers`
+processes each own one row band of a Jacobi grid and one of them runs
+`slow_factor`x slower per cell. The static uniform cut is the two-phase
+analogue — every step waits for the straggler — and fills the row's
+``two_phase`` slot; the measured-cost dynamic re-cut (per-worker rate EMAs ->
+weighted :func:`repro.core.domain.part_extents` every `rebalance_every`
+steps) fills ``hdot``. The headline ratio is therefore the throughput
+recovered by re-cutting, tracked across PRs like every other schedule gap.
+
+Rows run under a single jax device (``devices: 1``): the parallelism here is
+OS processes (recorded as ``workers``), not jax devices — the drill is the
+multi-host story, the ``heat2d_weighted`` lint target is the jit story.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Any, Dict
+
+
+def worker(workers: int, rows: int, cols: int, steps: int, warmup: int,
+           rebalance_every: int, slow_factor: float) -> Dict[str, Any]:
+    from repro.runtime.rebalance import straggler_drill_compare
+
+    r = straggler_drill_compare(
+        workers=workers, rows=rows, cols=cols, steps=steps, warmup=warmup,
+        rebalance_every=rebalance_every, slow_worker=0,
+        slow_factor=slow_factor)
+    st, dy = r["static"], r["dynamic"]
+    return {
+        "devices": 1, "workers": workers, "grid": [rows, cols],
+        "steps": steps, "slow_factor": slow_factor,
+        "two_phase": {"steps_per_s": st["steps_per_s"]},
+        "hdot": {"steps_per_s": dy["steps_per_s"],
+                 "recuts": len(dy["cut_history"]) - 1,
+                 "final_extents": list(dy["extents"])},
+        "numerics_identical": bool(st["max_err"] < 1e-6
+                                   and dy["max_err"] < 1e-6),
+    }
+
+
+def run(configs=((4, 3.0), (4, 5.0)), rows: int = 64, cols: int = 64,
+        steps: int = 24, warmup: int = 4,
+        rebalance_every: int = 4) -> Dict[str, Any]:
+    """`configs` is a sequence of (workers, slow_factor) pairs — one row
+    each. The per-cell cost is sleep-dominated (repro.runtime.rebalance), so
+    the rows are CI-stable."""
+    from benchmarks._util import run_worker
+
+    rows_out = []
+    for workers, slow in configs:
+        rows_out.append(run_worker(
+            "benchmarks.rebalance", 1,
+            ["--workers", str(workers), "--rows", str(rows),
+             "--cols", str(cols), "--steps", str(steps),
+             "--warmup", str(warmup),
+             "--rebalance-every", str(rebalance_every),
+             "--slow-factor", str(slow)]))
+    return {"table": "dynamic re-partitioning (straggler drill)",
+            "rows": rows_out}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--rows", type=int, default=64)
+    ap.add_argument("--cols", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--warmup", type=int, default=4)
+    ap.add_argument("--rebalance-every", type=int, default=4)
+    ap.add_argument("--slow-factor", type=float, default=3.0)
+    args = ap.parse_args()
+    if args.worker:
+        from benchmarks._util import emit
+
+        emit(worker(args.workers, args.rows, args.cols, args.steps,
+                    args.warmup, args.rebalance_every, args.slow_factor))
+        return
+    rec = run()
+    for r in rec["rows"]:
+        tp, hd = r["two_phase"], r["hdot"]
+        print(f"workers={r['workers']} slow={r['slow_factor']}x "
+              f"static={tp['steps_per_s']:6.1f}/s "
+              f"dynamic={hd['steps_per_s']:6.1f}/s "
+              f"recuts={hd['recuts']} identical={r['numerics_identical']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@
   lm_step             HDOT grad-sync buckets on an LM step        measured
   lm_moe              MoE EP capacity-chunked a2a vs monolithic   measured
   serve               continuous batching vs wave serving         measured
+  rebalance           measured-cost dynamic re-cut straggler drill measured
 
 Results land in results/bench/*.json + a markdown summary. Run:
   PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
@@ -29,7 +30,7 @@ import json
 import time
 import traceback
 
-from benchmarks import (bench_overlap, hpccg, lm_step, serve,
+from benchmarks import (bench_overlap, hpccg, lm_step, rebalance, serve,
                         table1_halo_memory, table2_heat2d, table4_creams)
 from benchmarks._util import REPO, RESULTS, save
 
@@ -55,13 +56,17 @@ SUITES = {
     "lm_step": lambda quick: lm_step.run(sizes=(2,) if quick else (2, 8)),
     "lm_moe": lambda quick: lm_step.run_moe(sizes=(2,) if quick else (2, 4)),
     "serve": lambda quick: serve.run(quick=quick),
+    "rebalance": lambda quick: rebalance.run(
+        configs=((4, 3.0),) if quick else ((4, 3.0), (4, 5.0), (8, 3.0)),
+        steps=20 if quick else 32),
 }
 
 
 # suite -> short key in the consolidated BENCH_quick.json record
 QUICK_KEYS = {"table2_heat2d": "heat2d", "table4_creams": "creams",
               "hpccg": "hpccg", "bench_overlap": "overlap",
-              "lm_step": "lm_step", "lm_moe": "moe", "serve": "serve"}
+              "lm_step": "lm_step", "lm_moe": "moe", "serve": "serve",
+              "rebalance": "rebalance"}
 
 
 def _schedule_rates(row: dict):

@@ -36,7 +36,7 @@ def worker(devices: int, n: int, iters: int,
         axis = ("rows", "cols")
     else:
         mesh = make_mesh((devices,), ("data",))
-        axis = "data"
+        axis = ("data",)
     u0 = heat2d_init(n, n)
     out: Dict[str, Any] = {"devices": devices, "n": n, "iters": iters}
     if mesh_shape:

@@ -38,7 +38,7 @@ def worker(devices: int, nz: int, steps: int,
         shape = (20, 32 * ry, nz)
     else:
         mesh = make_mesh((devices,), ("data",))
-        axis = "data"
+        axis = ("data",)
         # paper: 20 x 20 x 7000; scaled-down x/y for CPU wall clock
         shape = (20, 20, nz)
     key = jax.random.PRNGKey(0)

@@ -42,11 +42,11 @@ def main() -> None:
     print(ascii_field(np.asarray(u0)))
 
     for iters in (25, 100):
-        u_hd, res = heat2d_solve(u0, mesh, "data", iters, mode="hdot")
+        u_hd, res = heat2d_solve(u0, mesh, ("data",), iters, mode="hdot")
         print(f"\nafter {iters} HDOT sweeps (residual {float(res[-1]):.3e}):")
         print(ascii_field(np.asarray(u_hd)))
 
-    u_tp, _ = heat2d_solve(u0, mesh, "data", 100, mode="two_phase")
+    u_tp, _ = heat2d_solve(u0, mesh, ("data",), 100, mode="two_phase")
     print(f"\ntwo_phase == hdot: "
           f"{np.allclose(np.asarray(u_tp), np.asarray(u_hd), atol=1e-6)}")
 

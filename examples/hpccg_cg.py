@@ -21,7 +21,7 @@ def main() -> None:
     b = jax.random.normal(jax.random.PRNGKey(0), (n, n, n), jnp.float32)
 
     for mode in ("two_phase", "hdot"):
-        x, hist = hpccg_solve(b, mesh, "data", iters=40, mode=mode)
+        x, hist = hpccg_solve(b, mesh, ("data",), iters=40, mode=mode)
         h = np.asarray(hist)
         print(f"{mode:10s}: ||r|| {h[0]:.3e} -> {h[-1]:.3e} "
               f"({h[0]/h[-1]:.1e}x) in 40 iters")

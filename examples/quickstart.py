@@ -30,8 +30,8 @@ print(f"task level:    {len(subs)} subdomains per domain, "
 print("\n== 2. Heat2D: two_phase vs hdot ==")
 mesh = make_mesh((jax.device_count(),), ("data",))
 u0 = heat2d_init(128, 128)
-u_tp, res_tp = heat2d_solve(u0, mesh, "data", iters=50, mode="two_phase")
-u_hd, res_hd = heat2d_solve(u0, mesh, "data", iters=50, mode="hdot")
+u_tp, res_tp = heat2d_solve(u0, mesh, ("data",), iters=50, mode="two_phase")
+u_hd, res_hd = heat2d_solve(u0, mesh, ("data",), iters=50, mode="hdot")
 print(f"residual after 50 sweeps: two_phase={float(res_tp[-1]):.3e} "
       f"hdot={float(res_hd[-1]):.3e}")
 print(f"fields identical: {np.allclose(np.asarray(u_tp), np.asarray(u_hd))}")

@@ -104,7 +104,7 @@ def _halo_jit(ndim: int, steps: int, peel: bool, donate: bool = True):
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
 
-    from repro.core.halo import halo_scan, halo_scan_2d, halo_scan_nd
+    from repro.core.halo import halo_scan_nd
     from repro.launch.mesh import make_grid_mesh, make_mesh
 
     donate_argnums = (0,) if donate else ()
@@ -112,8 +112,9 @@ def _halo_jit(ndim: int, steps: int, peel: bool, donate: bool = True):
         mesh = make_mesh((4,), ("data",))
         avg3 = lambda p: (p[:-2] + p[1:-1] + p[2:]) / 3.0
         f = jax.shard_map(
-            lambda x: halo_scan(x, avg3, "data", 1, 0, steps, periodic=True,
-                                peel=peel, unroll=steps)[0],
+            lambda x: halo_scan_nd(x, avg3, (("data", 0),), 1, steps,
+                                   periodic=True, subdomains=(4,), peel=peel,
+                                   unroll=steps)[0],
             mesh=mesh, in_specs=(P("data"),), out_specs=P("data"))
         spec = jax.ShapeDtypeStruct((16, 4), jnp.float32)
     elif ndim == 2:
@@ -121,9 +122,9 @@ def _halo_jit(ndim: int, steps: int, peel: bool, donate: bool = True):
         star = lambda p: (p[1:-1, 1:-1] + p[:-2, 1:-1] + p[2:, 1:-1]
                           + p[1:-1, :-2] + p[1:-1, 2:]) / 5.0
         f = jax.shard_map(
-            lambda x: halo_scan_2d(x, star, ("rows", "cols"), 1, (0, 1),
-                                   steps, periodic=True, peel=peel,
-                                   unroll=steps)[0],
+            lambda x: halo_scan_nd(x, star, (("rows", 0), ("cols", 1)), 1,
+                                   steps, periodic=True, subdomains=(2, 2),
+                                   peel=peel, unroll=steps)[0],
             mesh=mesh, in_specs=(P("rows", "cols"),),
             out_specs=P("rows", "cols"))
         spec = jax.ShapeDtypeStruct((16, 16), jnp.float32)
@@ -180,7 +181,7 @@ def _heat2d_1d() -> Target:
     from repro.core.stencil import _heat2d_solver
     from repro.launch.mesh import make_mesh
 
-    f = _heat2d_solver(make_mesh((4,), ("data",)), "data", 2, "hdot", 4)
+    f = _heat2d_solver(make_mesh((4,), ("data",)), ("data",), 2, "hdot", 4)
     txt = _pre_opt_text(f, jax.ShapeDtypeStruct((32, 32), jnp.float32))
     return Target("heat2d_1d", txt,
                   LintContext(target="heat2d_1d",
@@ -204,6 +205,27 @@ def _heat2d_2d() -> Target:
                               expected_permute_total=PERMUTES_HALO(2, 2)))
 
 
+@target("heat2d_weighted")
+def _heat2d_weighted() -> Target:
+    """heat2d hdot with a measured-cost WEIGHTED (uneven) interior re-cut on
+    a 2x2 mesh: the dynamic load-balancing lowering. The face partition — and
+    thus the ppermute schedule — must be identical to the uniform cut (same
+    pair count, zero exposed collectives); only the interior chunk grid is
+    uneven (local 16x18 block, interior 14x16 cut (5,9) x (7,9))."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.stencil import _heat2d_solver
+    from repro.launch.mesh import make_grid_mesh
+
+    f = _heat2d_solver(make_grid_mesh(2, 2), ("rows", "cols"), 2, "hdot",
+                       (2, 2), ((5, 9), (7, 9)))
+    txt = _pre_opt_text(f, jax.ShapeDtypeStruct((32, 36), jnp.float32))
+    return Target("heat2d_weighted", txt,
+                  LintContext(target="heat2d_weighted",
+                              expected_permute_total=PERMUTES_HALO(2, 2)))
+
+
 @target("rk3_1d")
 def _rk3_1d() -> Target:
     """RK3 advection, z-slab decomposition over 4 devices, steps=2."""
@@ -215,7 +237,7 @@ def _rk3_1d() -> Target:
 
     # global dim 2 = 64 so the local shard keeps >= 16 cells (the pipelined
     # stage-carried path; smaller shards take the per-step fallback)
-    f = _rk3_solver(make_mesh((4,), ("data",)), "data", 2, 0.01, "hdot")
+    f = _rk3_solver(make_mesh((4,), ("data",)), ("data",), 2, 0.01, "hdot")
     txt = _pre_opt_text(f, jax.ShapeDtypeStruct((12, 16, 64), jnp.float32))
     return Target("rk3_1d", txt,
                   LintContext(target="rk3_1d",
@@ -247,7 +269,7 @@ def _hpccg_1d() -> Target:
     from repro.core.stencil import _hpccg_solver
     from repro.launch.mesh import make_mesh
 
-    f = _hpccg_solver(make_mesh((4,), ("data",)), "data", 2, "hdot", 4)
+    f = _hpccg_solver(make_mesh((4,), ("data",)), ("data",), 2, "hdot", 4)
     txt = _pre_opt_text(f, jax.ShapeDtypeStruct((12, 20, 20), jnp.float32))
     return Target("hpccg_1d", txt,
                   LintContext(target="hpccg_1d",
@@ -600,7 +622,8 @@ def _broken_two_phase_heat2d() -> Target:
     from repro.core.stencil import _heat2d_solver
     from repro.launch.mesh import make_mesh
 
-    f = _heat2d_solver(make_mesh((4,), ("data",)), "data", 2, "two_phase", 4)
+    f = _heat2d_solver(make_mesh((4,), ("data",)), ("data",), 2, "two_phase",
+                       4)
     txt = _pre_opt_text(f, jax.ShapeDtypeStruct((32, 32), jnp.float32))
     return Target("broken_two_phase_heat2d", txt,
                   LintContext(target="broken_two_phase_heat2d"))

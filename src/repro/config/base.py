@@ -256,6 +256,15 @@ class ParallelConfig:
     moe_a2a_chunks: int = 1
     # int8 error-feedback compression on the cross-pod gradient hop
     grad_compression: str = "none"     # 'none' | 'int8_ef'
+    # measured-cost dynamic re-partitioning: every K steps, re-cut the
+    # interior chunk grid from per-chunk wall-clock EMAs (core/cost.py) and
+    # recompile only if the cut changed. 0 = static uniform cut (off).
+    rebalance_every: int = 0
+
+    def __post_init__(self):
+        if self.rebalance_every < 0:
+            raise ValueError(
+                f"rebalance_every must be >= 0, got {self.rebalance_every}")
 
 
 @dataclass(frozen=True)

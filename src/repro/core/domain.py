@@ -71,18 +71,126 @@ def _split_extent(extent: int, parts: int) -> List[Tuple[int, int]]:
     return out
 
 
-def decompose_grid(shape: Sequence[int], parts: Sequence[int]) -> List[Box]:
+def _split_extent_weighted(extent: int, parts: int,
+                           weights: Sequence[float]) -> List[Tuple[int, int]]:
+    """Split [0, extent) into `parts` contiguous ranges so each part's summed
+    per-cell cost approaches total/parts. Cut p is placed at the first cell
+    where the cost prefix crosses p/parts of the total, then clamped so every
+    part keeps >= 1 cell (when extent >= parts). Guarantees: contiguous
+    disjoint cover, monotone cut positions, and
+    max part cost <= total/parts + max(weights)."""
+    if parts < 1:
+        raise ValueError(f"cannot split extent {extent} into {parts} parts")
+    w = [float(x) for x in weights]
+    if len(w) != extent:
+        raise ValueError(
+            f"weighted split needs one cost per cell: got {len(w)} weights "
+            f"for extent {extent}")
+    neg = [x for x in w if x < 0]
+    if neg:
+        raise ValueError(f"cell weights must be non-negative, got {neg[:3]}")
+    total = sum(w)
+    if total <= 0.0 or all(x == w[0] for x in w):
+        # no signal, or a flat profile: equal-cost cells carry no preference
+        # between balanced cuts, so collapse onto the uniform distribution
+        # (keeps flat re-measurements from flipping the cut and recompiling)
+        return _split_extent(extent, parts)
+    prefix = [0.0] * (extent + 1)
+    for i, x in enumerate(w):
+        prefix[i + 1] = prefix[i] + x
+    reserve = 1 if extent >= parts else 0
+    cuts = [0]
+    for p in range(1, parts):
+        target = total * p / parts
+        c = cuts[-1]
+        while c < extent and prefix[c] < target:
+            c += 1
+        c = max(c, cuts[-1] + reserve)
+        c = min(c, extent - reserve * (parts - p))
+        cuts.append(c)
+    cuts.append(extent)
+    return [(cuts[p], cuts[p + 1]) for p in range(parts)]
+
+
+def _is_extents(entry, parts: int, extent: int) -> bool:
+    """True when `entry` spells explicit per-part extents (len == parts ints
+    summing to extent) rather than per-cell costs."""
+    try:
+        vals = list(entry)
+    except TypeError:
+        return False
+    return (len(vals) == parts
+            and all(isinstance(v, int) or (hasattr(v, "is_integer")
+                                           and float(v).is_integer())
+                    for v in vals)
+            and sum(int(v) for v in vals) == extent)
+
+
+def split_ranges(extent: int, parts: int,
+                 weights=None) -> List[Tuple[int, int]]:
+    """One dimension of THE partition scheme, with an optional measured-cost
+    path. `weights` is one of:
+
+    - ``None`` — the classic uniform block distribution (bit-identical to the
+      historical `_split_extent`),
+    - explicit per-part extents (`parts` ints summing to `extent`) — a
+      canonical cut, used as jit-cache keys by the solvers,
+    - per-cell costs (`extent` non-negative floats) — cut so each part's
+      summed cost is within max(weights) of the total/parts ideal.
+    """
+    if weights is None:
+        return _split_extent(extent, parts)
+    if _is_extents(weights, parts, extent):
+        out = []
+        cur = 0
+        for v in weights:
+            n = int(v)
+            if n < 0:
+                raise ValueError(f"part extents must be >= 0, got {tuple(weights)}")
+            out.append((cur, cur + n))
+            cur += n
+        return out
+    return _split_extent_weighted(extent, parts, weights)
+
+
+def part_extents(extent: int, parts: int, weights=None) -> Tuple[int, ...]:
+    """The canonical (hashable) form of one dimension's cut: per-part extents.
+    `part_extents(e, p, w)` is idempotent — feeding the result back in as
+    `weights` reproduces the same cut — which is what lets the solvers key
+    their compiled-program caches on it."""
+    return tuple(b - a for a, b in split_ranges(extent, parts, weights))
+
+
+def _norm_weights(weights, ndim: int):
+    """Normalize a per-dim weights spec to a list of ndim entries (None or a
+    per-dim sequence)."""
+    if weights is None:
+        return [None] * ndim
+    weights = list(weights)
+    if len(weights) != ndim:
+        raise ValueError(
+            f"weights names {len(weights)} dims but the space is {ndim}-d — "
+            f"one entry (or None) per dim required")
+    return weights
+
+
+def decompose_grid(shape: Sequence[int], parts: Sequence[int],
+                   weights=None) -> List[Box]:
     """THE partition scheme (used identically at process- and task-level).
 
     Splits an N-d index space of `shape` into a grid of `parts[i]` blocks per
     dimension, row-major order. Every cell belongs to exactly one box.
+    `weights` (optional, one entry per dim) routes a dim through the
+    measured-cost cut of :func:`split_ranges`; ``None`` entries stay uniform.
     """
     if len(shape) != len(parts):
         raise ValueError(
             f"shape {tuple(shape)} is {len(shape)}-d but parts "
             f"{tuple(parts)} names {len(parts)} dims — one block count per "
             f"dim required")
-    per_dim = [_split_extent(e, p) for e, p in zip(shape, parts)]
+    wts = _norm_weights(weights, len(shape))
+    per_dim = [split_ranges(e, p, wd)
+               for e, p, wd in zip(shape, parts, wts)]
 
     boxes: List[Box] = []
 
@@ -210,16 +318,31 @@ class Domain:
 
 
 def interior_boxes(shape: Sequence[int], width: int,
-                   grid: Sequence[int]) -> List[Box]:
+                   grid: Sequence[int], weights=None) -> List[Box]:
     """Task-level reuse of :func:`decompose_grid` on the INTERIOR of a local
     block: the cells [width, extent-width) per dim are split into a `grid` of
     chunk boxes (local-block coordinates). This is the 2-D over-decomposition
     the halo machinery feeds its interior chunk tasks from — the same
     partition function that cut the process mesh, one level down; the
-    boundary strips (the halo consumers) are exactly the complement."""
+    boundary strips (the halo consumers) are exactly the complement.
+
+    `weights` (optional, one entry per dim, sized against the INTERIOR
+    extent) produces the measured-cost uneven cut of :func:`split_ranges`;
+    ``weights=None`` is bit-identical to the historical uniform grid."""
     inner = [max(0, e - 2 * width) for e in shape]
     shift = (width,) * len(tuple(shape))
-    return [b.shifted(shift) for b in decompose_grid(inner, grid)]
+    return [b.shifted(shift) for b in decompose_grid(inner, grid, weights)]
+
+
+def interior_cuts(shape: Sequence[int], width: int, grid: Sequence[int],
+                  weights=None) -> Tuple[Tuple[int, ...], ...]:
+    """Canonical per-dim part extents of :func:`interior_boxes`' cut — the
+    hashable cut descriptor the jitted-solver caches key on, so a rebalance
+    that leaves the cut unchanged reuses the compiled program."""
+    inner = [max(0, e - 2 * width) for e in shape]
+    wts = _norm_weights(weights, len(inner))
+    return tuple(part_extents(e, p, wd)
+                 for e, p, wd in zip(inner, grid, wts))
 
 
 def _unravel(i: int, grid: Sequence[int]) -> Tuple[int, ...]:

@@ -25,7 +25,7 @@ step's interior chunks compute, removing the per-step comm/compute dependency
 chain entirely (one pipeline-fill exchange at the start is the only exposed
 latency; the drain step is peeled, so no dead final exchange is issued).
 
-The machinery is N-DIMENSIONAL: ``decomp`` is a tuple of ``(axis_name, dim)``
+The machinery is N-DIMENSIONAL: ``axes`` is a tuple of ``(axis_name, dim)``
 pairs — one per decomposed array dim — and the same scheme recurses over any
 number of mesh axes (paper §3: ONE partition function, applied at process
 level and again at task level, at every depth of the hierarchy):
@@ -39,15 +39,24 @@ level and again at task level, at every depth of the hierarchy):
     interior compute, stitching each axis's outgoing edges from the face
     outputs alone so every ppermute departs before any interior chunk runs.
 
+The N-D family additionally takes ``weights=`` — per-dim explicit chunk
+extents (the canonical cuts from :func:`repro.core.domain.interior_cuts`) —
+so a measured-cost re-partition produces UNEVEN interior chunk grids while
+the onion face partition (and thus the ppermute schedule) is untouched: the
+faces depend only on `width`, never on where the interior is cut.
+
 The 1-D (``halo_scan``/``stencil_hdot``/...) and 2-D (``*_2d``) entry points
-are thin wrappers over the N-D implementation, kept for their ergonomic
-signatures (explicit ``lo/hi`` halos in 1-D; the flat four-halo tuple in 2-D).
+are DEPRECATED thin aliases of the N-D implementation, kept for their
+ergonomic signatures (explicit ``lo/hi`` halos in 1-D; the flat four-halo
+tuple in 2-D); new code should spell the decomposition once, as
+``axes=((axis_name, dim), ...)``.
 
 All functions run inside ``shard_map`` bodies; `axis_name` names the mesh axis
 that carries the process-level domain decomposition for `dim`.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Callable, List, Optional, Sequence, Tuple
 
@@ -58,7 +67,20 @@ from jax import lax
 from repro.core.domain import interior_boxes
 
 # One decomposed dim: (mesh_axis_name, array_dim).
-Decomp = Sequence[Tuple[str, int]]
+Axes = Sequence[Tuple[str, int]]
+Decomp = Axes  # deprecated alias, pre-unification spelling
+
+_DEPRECATION_WARNED: set = set()
+
+
+def _warn_deprecated(name: str, repl: str) -> None:
+    """Once-per-process deprecation note for the pre-N-D entry points."""
+    if name in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(name)
+    warnings.warn(
+        f"{name} is a deprecated alias; use {repl} with "
+        f"axes=((axis_name, dim), ...)", DeprecationWarning, stacklevel=3)
 
 
 def _edge(u: jax.Array, dim: int, side: str, width: int) -> jax.Array:
@@ -156,12 +178,12 @@ def _norm_sub2(subdomains) -> Tuple[int, int]:
     return _norm_subn(subdomains, 2)
 
 
-def exchange_halo_nd(u: jax.Array, decomp: Decomp, width: int,
+def exchange_halo_nd(u: jax.Array, axes: Axes, width: int,
                      periodic: bool = False
                      ) -> List[Tuple[jax.Array, jax.Array]]:
     """One ppermute pair per decomposed axis; returns [(lo_k, hi_k), ...] in
-    `decomp` order. Corner ghosts are NOT exchanged."""
-    return [exchange_halo(u, a, width, d, periodic) for a, d in decomp]
+    `axes` order. Corner ghosts are NOT exchanged."""
+    return [exchange_halo(u, a, width, d, periodic) for a, d in axes]
 
 
 def pad_with_halo_nd(u: jax.Array, halos, width: int,
@@ -223,20 +245,56 @@ def _faces_nd(u: jax.Array, halos,
             for k in range(len(dims))]
 
 
+def _chunk_grid_nd(ext: Sequence[int], width: int,
+                   subdomains: Tuple[int, ...], weights) -> Tuple[list, list]:
+    """Resolve the interior chunk grid: per-dim chunk counts (`subdomains`
+    clamped so uniform chunks stay >= 2*width) plus the optional measured-cost
+    cut. `weights` is None or one entry per dim — None (uniform) or the
+    explicit chunk extents from :func:`repro.core.domain.interior_cuts`; an
+    extents entry fixes that dim's chunk count and must sum to the interior
+    extent."""
+    w = width
+    ks = [max(1, min(k, (n - 2 * w) // max(1, 2 * w)))  # keep chunks >= 2w
+          for k, n in zip(subdomains, ext)]
+    if weights is None:
+        return ks, None
+    wts = list(weights)
+    if len(wts) != len(ext):
+        raise ValueError(
+            f"weights names {len(wts)} dims but the decomposition is "
+            f"{len(ext)}-dimensional — one entry (or None) per dim required")
+    for lvl, entry in enumerate(wts):
+        if entry is None:
+            continue
+        entry = tuple(int(v) for v in entry)
+        inner = max(0, ext[lvl] - 2 * w)
+        if sum(entry) != inner or any(v < 0 for v in entry):
+            raise ValueError(
+                f"weights[{lvl}]={entry} must be non-negative chunk extents "
+                f"summing to the interior extent {inner} (use "
+                f"repro.core.domain.interior_cuts to canonicalize measured "
+                f"costs)")
+        wts[lvl] = entry
+        ks[lvl] = len(entry)  # an explicit cut fixes the chunk count
+    return ks, wts
+
+
 def _interior_chunks_nd(u: jax.Array,
                         stencil_fn: Callable[[jax.Array], jax.Array],
                         width: int, dims: Sequence[int],
-                        subdomains: Tuple[int, ...]) -> jax.Array:
+                        subdomains: Tuple[int, ...],
+                        weights=None) -> jax.Array:
     """Interior cells [w, n-w) per decomposed dim as an N-D grid of
     independent chunk tasks, cut by `interior_boxes` — the process-level
     partition scheme reused at task level. A chunk reads only its subdomain
     plus `width` ghosts, so chunks are disjoint work the latency-hiding
-    scheduler interleaves with every axis's ppermutes."""
+    scheduler interleaves with every axis's ppermutes. `weights` (per-dim
+    explicit chunk extents) makes the grid UNEVEN — the measured-cost re-cut —
+    without touching the face partition."""
     w = width
     ext = [u.shape[d] for d in dims]
-    ks = [max(1, min(k, (n - 2 * w) // max(1, 2 * w)))  # keep chunks >= 2w
-          for k, n in zip(subdomains, ext)]
-    boxes = interior_boxes(ext, w, ks)  # row-major over the ks grid
+    ks, wts = _chunk_grid_nd(ext, w, subdomains, weights)
+    boxes = interior_boxes(ext, w, ks, wts)  # row-major over the ks grid
     outs = []
     for b in boxes:
         src = u
@@ -264,7 +322,7 @@ def _assemble_nd(faces, interior: jax.Array,
 def stencil_with_halo_nd(u: jax.Array, halos,
                          stencil_fn: Callable[[jax.Array], jax.Array],
                          width: int, dims: Sequence[int],
-                         subdomains=2) -> jax.Array:
+                         subdomains=2, weights=None) -> jax.Array:
     """Communication-free half of the N-D hdot schedule: apply `stencil_fn`
     to a block whose 2·N face halos were ALREADY received (e.g. pipelined by
     halo_scan_nd or a solver carrying halos across iterations)."""
@@ -273,53 +331,56 @@ def stencil_with_halo_nd(u: jax.Array, halos,
     if any(u.shape[d] < 4 * width for d in dims):  # degenerate: no interior
         return stencil_fn(pad_with_halo_nd(u, halos, width, dims))
     faces = _faces_nd(u, halos, stencil_fn, width, dims)
-    interior = _interior_chunks_nd(u, stencil_fn, width, dims, subdomains)
+    interior = _interior_chunks_nd(u, stencil_fn, width, dims, subdomains,
+                                   weights)
     return _assemble_nd(faces, interior, dims)
 
 
 def stencil_two_phase_nd(u: jax.Array,
                          stencil_fn: Callable[[jax.Array], jax.Array],
-                         decomp: Decomp, width: int,
+                         axes: Axes, width: int,
                          periodic: bool = False) -> jax.Array:
     """comm(all axes); barrier; compute(whole block) — paper Code 2."""
-    dims = tuple(d for _, d in decomp)
-    halos = exchange_halo_nd(u, decomp, width, periodic)
+    dims = tuple(d for _, d in axes)
+    halos = exchange_halo_nd(u, axes, width, periodic)
     return stencil_fn(pad_with_halo_nd(u, halos, width, dims))
 
 
 def stencil_hdot_nd(u: jax.Array,
                     stencil_fn: Callable[[jax.Array], jax.Array],
-                    decomp: Decomp, width: int, periodic: bool = False,
-                    subdomains=2) -> jax.Array:
+                    axes: Axes, width: int, periodic: bool = False,
+                    subdomains=2, weights=None) -> jax.Array:
     """N-D interior/boundary over-decomposition (paper Code 4): 2·N face
     tasks consume the N ppermute pairs; the interior chunk grid depends only
     on `u`. Numerics identical to the two-phase schedule (asserted in tests).
     """
-    dims = tuple(d for _, d in decomp)
+    dims = tuple(d for _, d in axes)
     if any(u.shape[d] < 4 * width for d in dims):
-        return stencil_two_phase_nd(u, stencil_fn, decomp, width, periodic)
-    halos = exchange_halo_nd(u, decomp, width, periodic)
-    return stencil_with_halo_nd(u, halos, stencil_fn, width, dims, subdomains)
+        return stencil_two_phase_nd(u, stencil_fn, axes, width, periodic)
+    halos = exchange_halo_nd(u, axes, width, periodic)
+    return stencil_with_halo_nd(u, halos, stencil_fn, width, dims, subdomains,
+                                weights)
 
 
 def stencil_apply_nd(u: jax.Array,
                      stencil_fn: Callable[[jax.Array], jax.Array],
-                     decomp: Decomp, width: int, periodic: bool = False,
-                     mode: str = "hdot", subdomains=2) -> jax.Array:
+                     axes: Axes, width: int, periodic: bool = False,
+                     mode: str = "hdot", subdomains=2,
+                     weights=None) -> jax.Array:
     if mode == "hdot":
-        return stencil_hdot_nd(u, stencil_fn, decomp, width, periodic,
-                               subdomains)
+        return stencil_hdot_nd(u, stencil_fn, axes, width, periodic,
+                               subdomains, weights)
     if mode in ("none", "two_phase"):
-        return stencil_two_phase_nd(u, stencil_fn, decomp, width, periodic)
+        return stencil_two_phase_nd(u, stencil_fn, axes, width, periodic)
     raise ValueError(f"unknown overlap mode {mode!r}")
 
 
 def halo_scan_nd(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
-                 decomp: Decomp, width: int, steps: int,
+                 axes: Axes, width: int, steps: int,
                  periodic: bool = False, mode: str = "hdot", subdomains=2,
                  step_out_fn: Optional[Callable[[jax.Array, jax.Array],
                                                 jax.Array]] = None,
-                 unroll: int = 1, peel: bool = True
+                 unroll: int = 1, peel: bool = True, weights=None
                  ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Double-buffered multi-step stencil driver on an N-D process mesh.
 
@@ -343,18 +404,21 @@ def halo_scan_nd(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
     when not provided). Numerics are identical to `steps` iterated calls of
     :func:`stencil_apply_nd` — asserted in tests. `unroll` is forwarded to
     lax.scan (the HLO-inspection tests unroll fully so every exchange is a
-    countable op definition).
+    countable op definition). `weights` (per-dim explicit chunk extents from
+    :func:`repro.core.domain.interior_cuts`) cuts the interior chunk grid
+    unevenly — the face partition and the ppermute schedule are unchanged, so
+    a measured-cost re-cut never alters the communication shape.
     """
-    decomp = tuple((a, d) for a, d in decomp)
-    dims = tuple(d for _, d in decomp)
+    axes = tuple((a, d) for a, d in axes)
+    dims = tuple(d for _, d in axes)
     w = width
     ext = tuple(u.shape[d] for d in dims)
     if mode != "hdot" or any(n < 4 * w for n in ext) or steps < 1:
         # two-phase baseline (or degenerate block / empty scan, which keeps
         # the length-0 stacked-outs contract): plain comm->compute scan
         def body(u, _):
-            u_new = stencil_apply_nd(u, stencil_fn, decomp, w, periodic,
-                                     mode, subdomains)
+            u_new = stencil_apply_nd(u, stencil_fn, axes, w, periodic,
+                                     mode, subdomains, weights)
             return u_new, step_out_fn(u_new, u) if step_out_fn else None
         return lax.scan(body, u, None, length=steps, unroll=unroll)
 
@@ -368,7 +432,7 @@ def halo_scan_nd(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
         # last `w` cells along dim k (faces of LATER axes never reach the
         # edge region — their dim-k extent is the interior range).
         halos_next = []
-        for k, (a, dk) in enumerate(decomp):
+        for k, (a, dk) in enumerate(axes):
             lo_e, hi_e = faces[k]
             nk = ext[k]
             for j in reversed(range(k)):
@@ -386,12 +450,13 @@ def halo_scan_nd(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
         u, halos = carry
         faces = _faces_nd(u, halos, stencil_fn, w, dims)
         halos_next = exchange_from_faces(faces)
-        interior = _interior_chunks_nd(u, stencil_fn, w, dims, subdomains)
+        interior = _interior_chunks_nd(u, stencil_fn, w, dims, subdomains,
+                                       weights)
         u_new = _assemble_nd(faces, interior, dims)
         out = step_out_fn(u_new, u) if step_out_fn else None
         return (u_new, halos_next), out
 
-    halos0 = exchange_halo_nd(u, decomp, w, periodic)  # pipeline fill
+    halos0 = exchange_halo_nd(u, axes, w, periodic)  # pipeline fill
     if not peel:
         (u, _), outs = lax.scan(body, (u, halos0), None, length=steps,
                                 unroll=unroll)
@@ -399,7 +464,8 @@ def halo_scan_nd(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
     (u, halos), outs = lax.scan(body, (u, halos0), None, length=steps - 1,
                                 unroll=unroll)
     # Peeled drain: the last step consumes its halos, launches nothing.
-    u_new = stencil_with_halo_nd(u, halos, stencil_fn, w, dims, subdomains)
+    u_new = stencil_with_halo_nd(u, halos, stencil_fn, w, dims, subdomains,
+                                 weights)
     if step_out_fn is not None:
         outs = jax.tree.map(
             lambda s, o: jnp.concatenate([s, o[None]], axis=0), outs,
@@ -408,16 +474,17 @@ def halo_scan_nd(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
 
 
 # --------------------------------------------------------------------------
-# 1-D entry points — thin wrappers over the N-D core, kept for the explicit
-# (lo_halo, hi_halo) signatures the pipelined solvers in core/stencil.py use.
-# `stencil_fn(padded)` consumes a block padded by `width` on both ends of
-# `dim` only.
+# 1-D entry points — DEPRECATED thin aliases of the N-D core, kept for the
+# explicit (lo_halo, hi_halo) signatures older callers use. New code spells
+# the decomposition as axes=((axis_name, dim),). `stencil_fn(padded)`
+# consumes a block padded by `width` on both ends of `dim` only.
 # --------------------------------------------------------------------------
 
 def stencil_two_phase(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
                       axis_name: str, width: int, dim: int,
                       periodic: bool = False) -> jax.Array:
-    """comm(D); barrier; compute(D) — paper Code 2."""
+    """Deprecated alias: comm(D); barrier; compute(D) — paper Code 2."""
+    _warn_deprecated("stencil_two_phase", "stencil_two_phase_nd")
     return stencil_two_phase_nd(u, stencil_fn, ((axis_name, dim),), width,
                                 periodic)
 
@@ -425,10 +492,11 @@ def stencil_two_phase(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array]
 def stencil_with_halo(u: jax.Array, lo_halo: jax.Array, hi_halo: jax.Array,
                       stencil_fn: Callable[[jax.Array], jax.Array],
                       width: int, dim: int, subdomains: int = 4) -> jax.Array:
-    """Communication-free half of the 1-D hdot schedule: apply `stencil_fn`
-    to a block whose halos were ALREADY received (e.g. pipelined by halo_scan
-    or a solver carrying halos across iterations). Boundary strips consume
-    the halos; the interior is over-decomposed into `subdomains` chunks."""
+    """Deprecated alias of :func:`stencil_with_halo_nd` (halos spelled as the
+    flat (lo, hi) pair): apply `stencil_fn` to a block whose halos were
+    ALREADY received. Boundary strips consume the halos; the interior is
+    over-decomposed into `subdomains` chunks."""
+    _warn_deprecated("stencil_with_halo", "stencil_with_halo_nd")
     return stencil_with_halo_nd(u, [(lo_halo, hi_halo)], stencil_fn, width,
                                 (dim,), (subdomains,))
 
@@ -437,7 +505,8 @@ def stencil_hdot(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
                  axis_name: str, width: int, dim: int,
                  periodic: bool = False,
                  subdomains: int = 4) -> jax.Array:
-    """Interior/boundary over-decomposition (paper Code 4), one mesh axis."""
+    """Deprecated alias of :func:`stencil_hdot_nd`, one mesh axis."""
+    _warn_deprecated("stencil_hdot", "stencil_hdot_nd")
     return stencil_hdot_nd(u, stencil_fn, ((axis_name, dim),), width,
                            periodic, (subdomains,))
 
@@ -446,6 +515,8 @@ def stencil_apply(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
                   axis_name: str, width: int, dim: int,
                   periodic: bool = False, mode: str = "hdot",
                   subdomains: int = 4) -> jax.Array:
+    """Deprecated alias of :func:`stencil_apply_nd`, one mesh axis."""
+    _warn_deprecated("stencil_apply", "stencil_apply_nd")
     return stencil_apply_nd(u, stencil_fn, ((axis_name, dim),), width,
                             periodic, mode, (subdomains,))
 
@@ -457,17 +528,20 @@ def halo_scan(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
               step_out_fn: Optional[Callable[[jax.Array, jax.Array], jax.Array]]
               = None, unroll: int = 1,
               peel: bool = True) -> Tuple[jax.Array, Optional[jax.Array]]:
-    """Double-buffered multi-step driver on one mesh axis (see
-    :func:`halo_scan_nd` for the schedule)."""
+    """Deprecated alias: double-buffered multi-step driver on one mesh axis
+    (see :func:`halo_scan_nd` for the schedule)."""
+    _warn_deprecated("halo_scan", "halo_scan_nd")
     return halo_scan_nd(u, stencil_fn, ((axis_name, dim),), width, steps,
                         periodic, mode, (subdomains,), step_out_fn, unroll,
                         peel)
 
 
 # --------------------------------------------------------------------------
-# 2-D (rows x cols) entry points — thin wrappers over the N-D core, kept for
-# the flat four-halo tuple signature. `stencil_fn(padded)` consumes a block
-# padded by `width` on both ends of BOTH dims in `dims`.
+# 2-D (rows x cols) entry points — DEPRECATED thin aliases of the N-D core,
+# kept for the flat four-halo tuple signature. New code spells the
+# decomposition as axes=((row_axis, dim0), (col_axis, dim1)).
+# `stencil_fn(padded)` consumes a block padded by `width` on both ends of
+# BOTH dims in `dims`.
 # --------------------------------------------------------------------------
 
 def _halos2(halos):
@@ -478,8 +552,10 @@ def _halos2(halos):
 def exchange_halo_2d(u: jax.Array, axis_names: Tuple[str, str], width: int,
                      dims: Tuple[int, int], periodic: bool = False
                      ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Combined edge exchange on both mesh axes (one ppermute pair per axis).
-    Returns (lo0, hi0, lo1, hi1); corner ghosts are NOT exchanged."""
+    """Deprecated alias: combined edge exchange on both mesh axes (one
+    ppermute pair per axis). Returns (lo0, hi0, lo1, hi1); corner ghosts are
+    NOT exchanged."""
+    _warn_deprecated("exchange_halo_2d", "exchange_halo_nd")
     (lo0, hi0), (lo1, hi1) = exchange_halo_nd(
         u, tuple(zip(axis_names, dims)), width, periodic)
     return lo0, hi0, lo1, hi1
@@ -487,8 +563,10 @@ def exchange_halo_2d(u: jax.Array, axis_names: Tuple[str, str], width: int,
 
 def pad_with_halo_2d(u: jax.Array, halos, width: int, dims: Tuple[int, int]
                      ) -> jax.Array:
-    """Assemble the corner-free padded block: halos on the four faces, ZEROS
-    in the (2*width)^2 corners (star stencils never read them)."""
+    """Deprecated alias: assemble the corner-free padded block — halos on the
+    four faces, ZEROS in the (2*width)^2 corners (star stencils never read
+    them)."""
+    _warn_deprecated("pad_with_halo_2d", "pad_with_halo_nd")
     return pad_with_halo_nd(u, _halos2(halos), width, dims)
 
 
@@ -497,7 +575,8 @@ def stencil_two_phase_2d(u: jax.Array,
                          axis_names: Tuple[str, str], width: int,
                          dims: Tuple[int, int], periodic: bool = False
                          ) -> jax.Array:
-    """comm(both axes); barrier; compute(whole block) — the 2-D baseline."""
+    """Deprecated alias: comm(both axes); barrier; compute(whole block)."""
+    _warn_deprecated("stencil_two_phase_2d", "stencil_two_phase_nd")
     return stencil_two_phase_nd(u, stencil_fn, tuple(zip(axis_names, dims)),
                                 width, periodic)
 
@@ -506,8 +585,10 @@ def stencil_with_halo_2d(u: jax.Array, halos,
                          stencil_fn: Callable[[jax.Array], jax.Array],
                          width: int, dims: Tuple[int, int],
                          subdomains=(2, 2)) -> jax.Array:
-    """Communication-free half of the 2-D hdot schedule: apply `stencil_fn`
-    to a block whose four face halos were ALREADY received."""
+    """Deprecated alias of :func:`stencil_with_halo_nd` (halos spelled as the
+    flat four-tuple): apply `stencil_fn` to a block whose four face halos
+    were ALREADY received."""
+    _warn_deprecated("stencil_with_halo_2d", "stencil_with_halo_nd")
     return stencil_with_halo_nd(u, _halos2(halos), stencil_fn, width, dims,
                                 _norm_sub2(subdomains))
 
@@ -516,8 +597,9 @@ def stencil_hdot_2d(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
                     axis_names: Tuple[str, str], width: int,
                     dims: Tuple[int, int], periodic: bool = False,
                     subdomains=(2, 2)) -> jax.Array:
-    """2-D interior/boundary over-decomposition: four strip tasks consume the
-    two ppermute pairs; the (kr x kc) interior chunk grid depends only on u."""
+    """Deprecated alias of :func:`stencil_hdot_nd`: four strip tasks consume
+    the two ppermute pairs; the (kr x kc) interior grid depends only on u."""
+    _warn_deprecated("stencil_hdot_2d", "stencil_hdot_nd")
     return stencil_hdot_nd(u, stencil_fn, tuple(zip(axis_names, dims)), width,
                            periodic, _norm_sub2(subdomains))
 
@@ -527,6 +609,8 @@ def stencil_apply_2d(u: jax.Array,
                      axis_names: Tuple[str, str], width: int,
                      dims: Tuple[int, int], periodic: bool = False,
                      mode: str = "hdot", subdomains=(2, 2)) -> jax.Array:
+    """Deprecated alias of :func:`stencil_apply_nd`, two mesh axes."""
+    _warn_deprecated("stencil_apply_2d", "stencil_apply_nd")
     return stencil_apply_nd(u, stencil_fn, tuple(zip(axis_names, dims)),
                             width, periodic, mode, _norm_sub2(subdomains))
 
@@ -539,9 +623,10 @@ def halo_scan_2d(u: jax.Array, stencil_fn: Callable[[jax.Array], jax.Array],
                                                 jax.Array]] = None,
                  unroll: int = 1, peel: bool = True
                  ) -> Tuple[jax.Array, Optional[jax.Array]]:
-    """Double-buffered multi-step driver on a (rows x cols) mesh (see
-    :func:`halo_scan_nd` for the schedule; both axes' exchanges ride behind
-    the interior compute, and the drain step is peeled)."""
+    """Deprecated alias: double-buffered multi-step driver on a (rows x cols)
+    mesh (see :func:`halo_scan_nd` for the schedule; both axes' exchanges
+    ride behind the interior compute, and the drain step is peeled)."""
+    _warn_deprecated("halo_scan_2d", "halo_scan_nd")
     return halo_scan_nd(u, stencil_fn, tuple(zip(axis_names, dims)), width,
                         steps, periodic, mode, _norm_sub2(subdomains),
                         step_out_fn, unroll, peel)
@@ -569,6 +654,7 @@ def multi_dim_stencil(u: jax.Array,
                 padded = jnp.pad(u, pads)
             out = fn(padded)
         else:
-            out = stencil_apply(u, fn, axis_name, width, dim, periodic, mode)
+            out = stencil_apply_nd(u, fn, ((axis_name, dim),), width,
+                                   periodic, mode, (4,))
         total = out if total is None else total + out
     return total

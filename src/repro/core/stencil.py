@@ -15,6 +15,7 @@ reductions and boundary/interior splits.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -23,10 +24,50 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro import compat  # noqa: F401  (jax version shims)
-from repro.core.halo import (_norm_sub2, exchange_halo, halo_scan,
-                             halo_scan_2d, multi_dim_stencil, pad_with_halo,
-                             stencil_apply, stencil_with_halo)
+from repro.core.domain import part_extents
+from repro.core.halo import (_norm_subn, exchange_halo, halo_scan_nd,
+                             multi_dim_stencil, pad_with_halo,
+                             stencil_apply_nd, stencil_with_halo_nd)
 from repro.core.reduction import hdot_reduce, task_reduce
+
+_STR_AXES_WARNED: set = set()
+
+
+def normalize_mesh_axes(mesh_axes, solver: str,
+                        arities: Tuple[int, ...]) -> Tuple[str, ...]:
+    """THE solver mesh-topology contract: every solver takes
+    ``mesh_axes: tuple[str, ...]`` — one mesh axis name per decomposed grid
+    dim, arity selecting the topology (1 = the paper's slabs, 2/3 = grid
+    meshes). A bare string is accepted as a deprecated 1-axis spelling and
+    coerced (with a once-per-process note); anything else out of contract
+    raises a ValueError naming the solver and its accepted arities."""
+    if isinstance(mesh_axes, str):
+        if solver not in _STR_AXES_WARNED:
+            _STR_AXES_WARNED.add(solver)
+            warnings.warn(
+                f"{solver}: passing mesh_axes as a bare axis name is "
+                f"deprecated; pass a tuple, e.g. ({mesh_axes!r},)",
+                DeprecationWarning, stacklevel=3)
+        axes = (mesh_axes,)
+    else:
+        try:
+            axes = tuple(mesh_axes)
+        except TypeError:
+            raise ValueError(
+                f"{solver}: mesh_axes must be a tuple of mesh axis names, "
+                f"got {mesh_axes!r}") from None
+    if not all(isinstance(a, str) for a in axes):
+        raise ValueError(
+            f"{solver}: mesh_axes entries must be mesh axis names (str), "
+            f"got {axes!r}")
+    if len(axes) not in arities:
+        want = " or ".join(str(a) for a in arities)
+        raise ValueError(
+            f"{solver}: mesh_axes takes {want} axis name(s), got "
+            f"{len(axes)}: {axes!r}")
+    if len(set(axes)) != len(axes):
+        raise ValueError(f"{solver}: mesh_axes repeats an axis: {axes!r}")
+    return axes
 
 
 # =============================================================== Heat2D (§4.1)
@@ -57,55 +98,105 @@ def _heat2d_residual(axes, subdomains: int):
 
 
 @functools.lru_cache(maxsize=128)
-def _heat2d_solver(mesh, axis_name, iters: int, mode: str, subdomains):
-    """Cached jitted solver — (mesh, config) -> compiled fn. Without this,
-    every heat2d_solve call re-traced and re-compiled, so repeated calls
-    (and the benchmark timing loops) measured XLA compile time instead of
-    solver throughput."""
-    if isinstance(axis_name, tuple):
-        ar, ac = axis_name
-        kr, kc = _norm_sub2(subdomains)
-
-        def local(u):
-            return halo_scan_2d(
-                u, _jacobi_stencil_2d, (ar, ac), width=1, dims=(0, 1),
-                steps=iters, periodic=False, mode=mode, subdomains=(kr, kc),
-                step_out_fn=_heat2d_residual((ar, ac), kr * kc))
-
-        f = jax.shard_map(local, mesh=mesh, in_specs=P(ar, ac),
-                          out_specs=(P(ar, ac), P()))
-        return jax.jit(f)
+def _heat2d_solver(mesh, axes, iters: int, mode: str, subdomains, cuts=None):
+    """Cached jitted solver — (mesh, config, cut) -> compiled fn. Without
+    this, every heat2d_solve call re-traced and re-compiled, so repeated
+    calls (and the benchmark timing loops) measured XLA compile time instead
+    of solver throughput. `cuts` is the canonical per-dim chunk-extents tuple
+    from a measured-cost re-partition (None = uniform): keying the cache on
+    it means a rebalance recompiles ONLY when the cut actually changes and an
+    unchanged cut reuses the compiled program."""
+    axes = normalize_mesh_axes(axes, "heat2d_solve", (1, 2))
+    subs = _norm_subn(subdomains, len(axes))
+    hs_axes = tuple((a, d) for d, a in enumerate(axes))
+    n_chunks = 1
+    for s in subs:
+        n_chunks *= s
+    stencil_fn = _jacobi_stencil_2d if len(axes) == 2 else _jacobi_stencil
 
     def local(u):
-        return halo_scan(u, _jacobi_stencil, axis_name, width=1, dim=0,
-                         steps=iters, periodic=False, mode=mode,
-                         subdomains=subdomains,
-                         step_out_fn=_heat2d_residual(axis_name, subdomains))
+        return halo_scan_nd(
+            u, stencil_fn, hs_axes, width=1, steps=iters, periodic=False,
+            mode=mode, subdomains=subs,
+            step_out_fn=_heat2d_residual(axes, n_chunks), weights=cuts)
 
-    f = jax.shard_map(local, mesh=mesh, in_specs=P(axis_name, None),
-                      out_specs=(P(axis_name, None), P()))
+    spec = P(*axes) if len(axes) == 2 else P(axes[0], None)
+    f = jax.shard_map(local, mesh=mesh, in_specs=spec,
+                      out_specs=(spec, P()))
     return jax.jit(f)
 
 
-def heat2d_solve(u0: jax.Array, mesh, axis_name, iters: int,
-                 mode: str = "hdot", subdomains=4) -> Tuple[jax.Array, jax.Array]:
+def _heat2d_cuts(global_shape, mesh, axes, subdomains, chunk_weights):
+    """Canonicalize per-dim measured chunk costs into the hashable cut tuple
+    the jitted-solver cache keys on. Each entry of `chunk_weights` is None
+    (uniform), per-cell costs over the LOCAL shard's interior extent, or
+    explicit chunk extents. Returns None when the resolved cut IS the uniform
+    one, so a rebalance that lands back on uniform hits the same compiled
+    program as a plain solve."""
+    if chunk_weights is None:
+        return None
+    from repro.core.domain import _is_extents
+
+    w = 1
+    subs = _norm_subn(subdomains, len(axes))
+    entries = list(chunk_weights)
+    if len(entries) != len(axes):
+        raise ValueError(
+            f"heat2d_solve: chunk_weights names {len(entries)} dims but the "
+            f"decomposition is {len(axes)}-dimensional")
+    out = []
+    is_default = []
+    for d, (name, k, entry) in enumerate(zip(axes, subs, entries)):
+        n_local = global_shape[d] // mesh.shape[name]
+        inner = max(0, n_local - 2 * w)
+        kd = max(1, min(k, inner // (2 * w)))  # the clamped default count
+        if entry is None:
+            out.append(None)
+            is_default.append(True)
+            continue
+        entry = tuple(entry)
+        # len == interior extent reads as per-cell costs (uniform integer
+        # costs sum to the extent and would otherwise masquerade as a grid
+        # of 1-cell chunk extents); any other length must be explicit extents
+        if len(entry) != inner and _is_extents(entry, len(entry), inner):
+            out.append(tuple(int(v) for v in entry))
+        else:
+            out.append(part_extents(inner, kd, entry))
+        is_default.append(out[-1] == part_extents(inner, kd, None))
+    # a re-cut that lands back on the default uniform grid IS no cut:
+    # collapse onto the unweighted cache entry (no recompile)
+    if all(is_default):
+        return None
+    return tuple(out)
+
+
+def heat2d_solve(u0: jax.Array, mesh, mesh_axes, iters: int,
+                 mode: str = "hdot", subdomains=4,
+                 chunk_weights=None) -> Tuple[jax.Array, jax.Array]:
     """Run `iters` sweeps; returns (final grid, residual history).
 
     u0 is the GLOBAL grid; sharding happens here — process-level
-    decomposition == mesh. `axis_name` selects the topology:
+    decomposition == mesh. `mesh_axes` is the unified solver topology
+    contract (one mesh axis name per decomposed grid dim):
 
-      * one mesh axis name — the paper's horizontal MPI slabs (1-D, dim 0),
-      * a (rows_axis, cols_axis) pair — true 2-D block decomposition over
-        both grid dims via :func:`halo_scan_2d` (corner-free pipelining).
+      * ``(axis,)`` — the paper's horizontal MPI slabs (1-D, dim 0),
+      * ``(rows_axis, cols_axis)`` — true 2-D block decomposition over both
+        grid dims via :func:`halo_scan_nd` (corner-free pipelining).
 
     The sweep loop is double-buffered either way: sweep k+1's halo
     ppermute(s) depart while sweep k's interior chunk tasks compute (hdot
-    mode), and the drain sweep is peeled."""
-    if isinstance(axis_name, list):
-        axis_name = tuple(axis_name)
+    mode), and the drain sweep is peeled.
+
+    `chunk_weights` (per decomposed dim: None, per-cell measured costs over
+    the local interior, or explicit chunk extents) re-cuts the interior chunk
+    grid by measured cost — the dynamic load-balancing path. It is
+    canonicalized to chunk extents BEFORE the solver cache, so re-measuring
+    identical costs (or an unchanged cut) never recompiles."""
+    axes = normalize_mesh_axes(mesh_axes, "heat2d_solve", (1, 2))
     if isinstance(subdomains, list):
         subdomains = tuple(subdomains)
-    return _heat2d_solver(mesh, axis_name, iters, mode, subdomains)(u0)
+    cuts = _heat2d_cuts(u0.shape, mesh, axes, subdomains, chunk_weights)
+    return _heat2d_solver(mesh, axes, iters, mode, subdomains, cuts)(u0)
 
 
 def heat2d_init(nx: int, ny: int, dtype=jnp.float32) -> jax.Array:
@@ -157,8 +248,8 @@ def _rk3_rhs_with_halo(v: jax.Array, lo: jax.Array, hi: jax.Array,
     carried halos — no exchange on this stage's critical path."""
     xy = multi_dim_stencil(v, _diff2_dir, [(0, None), (1, None)], width=4,
                            periodic=True)
-    z = stencil_with_halo(v, lo, hi, functools.partial(_diff2_dir, dim=2),
-                          width=4, dim=2, subdomains=subdomains)
+    z = stencil_with_halo_nd(v, [(lo, hi)], functools.partial(_diff2_dir, dim=2),
+                             width=4, dims=(2,), subdomains=(subdomains,))
     return nu * (xy + z)
 
 
@@ -170,10 +261,10 @@ def _rk3_rhs_with_halo_2d(v: jax.Array, hy, hz, nu: float = 0.05,
     critical path, and the per-direction interior chunks are the independent
     work both ppermute pairs hide behind."""
     x = multi_dim_stencil(v, _diff2_dir, [(0, None)], width=4, periodic=True)
-    y = stencil_with_halo(v, hy[0], hy[1], functools.partial(_diff2_dir, dim=1),
-                          width=4, dim=1, subdomains=subdomains)
-    z = stencil_with_halo(v, hz[0], hz[1], functools.partial(_diff2_dir, dim=2),
-                          width=4, dim=2, subdomains=subdomains)
+    y = stencil_with_halo_nd(v, [hy], functools.partial(_diff2_dir, dim=1),
+                             width=4, dims=(1,), subdomains=(subdomains,))
+    z = stencil_with_halo_nd(v, [hz], functools.partial(_diff2_dir, dim=2),
+                             width=4, dims=(2,), subdomains=(subdomains,))
     return nu * (x + y + z)
 
 
@@ -235,9 +326,11 @@ def rk3_local_step_pipelined_2d(v: jax.Array, hy, hz, ay: str, az: str,
 
 
 @functools.lru_cache(maxsize=128)
-def _rk3_solver(mesh, axis_name, steps: int, dt: float, mode: str):
-    two_d = isinstance(axis_name, tuple)
-    ay, az = axis_name if two_d else (None, None)
+def _rk3_solver(mesh, axes, steps: int, dt: float, mode: str):
+    axes = normalize_mesh_axes(axes, "rk3_solve", (1, 2))
+    two_d = len(axes) == 2
+    ay, az = axes if two_d else (None, None)
+    axis_name = axes if two_d else axes[0]
 
     def local(v):
         if (two_d and mode == "hdot" and v.shape[1] >= 16
@@ -280,16 +373,15 @@ def _rk3_solver(mesh, axis_name, steps: int, dt: float, mode: str):
     return jax.jit(f)
 
 
-def rk3_solve(v0: jax.Array, mesh, axis_name, steps: int, dt: float = 0.05,
+def rk3_solve(v0: jax.Array, mesh, mesh_axes, steps: int, dt: float = 0.05,
               mode: str = "hdot") -> jax.Array:
-    """Run `steps` RK3 steps. `axis_name` selects the topology: one mesh axis
-    (the paper's z-decomposed slabs) or a (y_axis, z_axis) pair — true 2-D
-    (y, z) grid-mesh decomposition with stage-carried halos on BOTH axes
-    (each direction-split stencil consumes only its own axis's pair, so the
-    2-D mesh needs no corner messages)."""
-    if isinstance(axis_name, list):
-        axis_name = tuple(axis_name)
-    return _rk3_solver(mesh, axis_name, steps, dt, mode)(v0)
+    """Run `steps` RK3 steps. `mesh_axes` is the unified solver topology
+    contract: ``(z_axis,)`` — the paper's z-decomposed slabs — or a
+    ``(y_axis, z_axis)`` pair — true 2-D (y, z) grid-mesh decomposition with
+    stage-carried halos on BOTH axes (each direction-split stencil consumes
+    only its own axis's pair, so the 2-D mesh needs no corner messages)."""
+    axes = normalize_mesh_axes(mesh_axes, "rk3_solve", (1, 2))
+    return _rk3_solver(mesh, axes, steps, dt, mode)(v0)
 
 
 # ============================================================ HPCCG CG (§4.3)
@@ -328,13 +420,13 @@ def _stencil27_matvec(p: jax.Array, axis_name: Optional[str], mode: str,
 
     fn = functools.partial(per_z, dim=2)
     if halos is not None:
-        return stencil_with_halo(p, halos[0], halos[1], fn, width=1, dim=2,
-                                 subdomains=subdomains)
+        return stencil_with_halo_nd(p, [halos], fn, width=1, dims=(2,),
+                                    subdomains=(subdomains,))
     if axis_name is None:
         pads = [(0, 0), (0, 0), (1, 1)]
         return fn(jnp.pad(p, pads))
-    return stencil_apply(p, fn, axis_name, width=1, dim=2,
-                         periodic=False, mode=mode)
+    return stencil_apply_nd(p, fn, ((axis_name, 2),), width=1,
+                            periodic=False, mode=mode, subdomains=(4,))
 
 
 def _chain_fn27(dims: Tuple[int, ...]):
@@ -381,8 +473,9 @@ def _stencil27_matvec_chain(p: jax.Array, axes: Tuple[str, ...],
     p1, lo, hi = halos
     fn = _chain_fn27(dims)
     if mode == "hdot":
-        return stencil_with_halo(p1, lo, hi, fn, width=1, dim=dims[-1],
-                                 subdomains=subdomains)
+        return stencil_with_halo_nd(p1, [(lo, hi)], fn, width=1,
+                                    dims=(dims[-1],),
+                                    subdomains=(subdomains,))
     return fn(jnp.concatenate([lo, p1, hi], axis=dims[-1]))
 
 
@@ -400,18 +493,16 @@ def _ddot(a: jax.Array, b: jax.Array, axis_name: Optional[str],
 
 
 @functools.lru_cache(maxsize=128)
-def _hpccg_solver(mesh, axis_name, iters: int, mode: str, subdomains: int):
-    chained = isinstance(axis_name, tuple)
+def _hpccg_solver(mesh, mesh_axes, iters: int, mode: str, subdomains: int):
+    axes = normalize_mesh_axes(mesh_axes, "hpccg_solve", (1, 2, 3))
+    chained = len(axes) >= 2
+    # the reduction axes / 1-D exchange axis, in the historical spelling
+    # (bare name for slabs, tuple for chained meshes)
+    axis_name = axes if chained else axes[0]
     if chained:
-        axes = tuple(axis_name)
         # trailing grid dims carry the mesh: (y, z) for a pair, (x, y, z)
         # for a full 3-D mesh
         cdims = tuple(range(3 - len(axes), 3))
-        if not 2 <= len(axes) <= 3:
-            raise ValueError(
-                f"hpccg chained decomposition takes 2 or 3 mesh axes, got "
-                f"{len(axes)}: {axis_name!r} (pass a single axis name for "
-                f"1-D)")
 
     def matvec(p, halos):
         if chained:
@@ -474,14 +565,15 @@ def _hpccg_solver(mesh, axis_name, iters: int, mode: str, subdomains: int):
     return jax.jit(f)
 
 
-def hpccg_solve(b: jax.Array, mesh, axis_name, iters: int,
+def hpccg_solve(b: jax.Array, mesh, mesh_axes, iters: int,
                 mode: str = "hdot", subdomains: int = 4) -> Tuple[jax.Array, jax.Array]:
     """Unpreconditioned CG on the 27-point system (HPCCG's CG core; the paper
     taskifies ddot/waxpby/sparsemv — here each is an over-decomposed op).
     Returns (x, residual-norm history).
 
-    `axis_name` is one mesh axis (z-stacked slabs), a (y_axis, z_axis) pair,
-    or an (x_axis, y_axis, z_axis) triple — HPCCG's native full 3-D mesh.
+    `mesh_axes` is the unified solver topology contract: ``(z_axis,)``
+    (z-stacked slabs), a ``(y_axis, z_axis)`` pair, or an
+    ``(x_axis, y_axis, z_axis)`` triple — HPCCG's native full 3-D mesh.
     Multi-axis topologies use the sequential face-message chain
     (:func:`_exchange_chain`): each earlier dim is padded in order on the
     already-padded block, so the last dim's halo planes carry every corner
@@ -493,6 +585,5 @@ def hpccg_solve(b: jax.Array, mesh, axis_name, iters: int,
     — only the boundary-plane tasks of the next matvec wait on them. The
     jitted solver is cached per (mesh, topology, iters, mode, subdomains) so
     repeated solves (and benchmark timings) pay compile once."""
-    if isinstance(axis_name, list):
-        axis_name = tuple(axis_name)   # hashable + lax.psum wants a tuple
-    return _hpccg_solver(mesh, axis_name, iters, mode, subdomains)(b)
+    axes = normalize_mesh_axes(mesh_axes, "hpccg_solve", (1, 2, 3))
+    return _hpccg_solver(mesh, axes, iters, mode, subdomains)(b)

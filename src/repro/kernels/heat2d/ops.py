@@ -43,13 +43,13 @@ def heat2d_sweep_sharded(u: jax.Array, mesh, axis_names=("rows", "cols"),
     scheme, two levels (paper §3.2)."""
     from jax.sharding import PartitionSpec as P
 
-    from repro.core.halo import exchange_halo_2d
+    from repro.core.halo import exchange_halo_nd
 
     ar, ac = axis_names
 
     def local(ul):
-        north, south, west, east = exchange_halo_2d(
-            ul, (ar, ac), width=1, dims=(0, 1), periodic=False)
+        (north, south), (west, east) = exchange_halo_nd(
+            ul, ((ar, 0), (ac, 1)), width=1, periodic=False)
         return heat2d_sweep(ul, tile, sweeps, impl, interpret,
                             halo=(north, south, west, east))
 

@@ -1,5 +1,20 @@
-from repro.runtime.trainer import Trainer
-from repro.runtime.server import BatchServer
-from repro.runtime.ft import FaultTolerantRunner
+"""Training/serving runtime. Lazy re-exports: the straggler drill's
+multiprocessing workers import :mod:`repro.runtime.rebalance` in spawned
+children, and eagerly importing the Trainer here would drag jax (seconds of
+init) into every numpy-only worker."""
 
 __all__ = ["Trainer", "BatchServer", "FaultTolerantRunner"]
+
+_HOMES = {
+    "Trainer": "repro.runtime.trainer",
+    "BatchServer": "repro.runtime.server",
+    "FaultTolerantRunner": "repro.runtime.ft",
+}
+
+
+def __getattr__(name):
+    if name in _HOMES:
+        import importlib
+
+        return getattr(importlib.import_module(_HOMES[name]), name)
+    raise AttributeError(f"module 'repro.runtime' has no attribute {name!r}")

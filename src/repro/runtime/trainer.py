@@ -25,6 +25,7 @@ import numpy as np
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.checkpoint.elastic import shardings_for
 from repro.config.base import RunConfig
+from repro.core.cost import CostModel
 from repro.core.overlap import accumulate_grads, fsdp_unshard_full, grad_sync
 from repro.data.pipeline import SyntheticLMDataset
 from repro.models.model import ModelOptions, build_model
@@ -62,6 +63,13 @@ class Trainer:
         # the DP axes (see core.overlap.FsdpLayout); None = replicated state
         self._fsdp_layout = None
         self.metrics_log: list = []
+        # measured-cost model for dynamic re-partitioning: per-step wall
+        # clock recorded OUTSIDE jit, keyed by this process's index so a
+        # multi-host controller can marginalize stragglers out. The hook
+        # fires every ParallelConfig.rebalance_every steps (0 = never) and
+        # is where a driver re-cuts its decomposition from the EMAs.
+        self.cost_model = CostModel()
+        self.rebalance_hook: Optional[Callable[[CostModel, int], None]] = None
 
     # ------------------------------------------------------------------ setup
     def _ctx(self):
@@ -254,19 +262,30 @@ class Trainer:
         if self._jit_step is None:
             self._jit_step = self._build_step()
         t0 = time.time()
+        rebalance_every = self.run.parallel.rebalance_every
+        proc_key = (jax.process_index(),)
         with self._ctx():
             for _ in range(num_steps):
                 if failure_hook is not None:
                     failure_hook(self.step)
                 batch = self._place_batch(
                     self._augment_frontend(self.data.batch_at(self.step)))
+                ts = time.perf_counter()
                 self.params, self.opt_state, metrics = self._jit_step(
                     self.params, self.opt_state, batch)
+                # float() blocks on the step's outputs, so the measured span
+                # is real compute, not async dispatch latency
+                metrics = {k: float(v) for k, v in metrics.items()}
+                self.cost_model.record(
+                    proc_key, time.perf_counter() - ts,
+                    cells=self.run.train.global_batch)
                 self.step += 1
+                if (rebalance_every and self.rebalance_hook is not None
+                        and self.step % rebalance_every == 0):
+                    self.rebalance_hook(self.cost_model, self.step)
                 if self.step % self.run.train.checkpoint_every == 0:
                     self.save()
-                self.metrics_log.append(
-                    {k: float(v) for k, v in metrics.items()} | {"step": self.step})
+                self.metrics_log.append(metrics | {"step": self.step})
         self.ckpt.wait()
         return {"steps": num_steps, "seconds": time.time() - t0,
                 "final": self.metrics_log[-1] if self.metrics_log else {}}

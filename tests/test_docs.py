@@ -136,3 +136,27 @@ def test_bench_quick_tracks_fsdp_row():
     rows = [r for r in quick["lm_step"]["rows"] if "fsdp_two_phase_ratio" in r]
     assert rows, "lm_step lost its fsdp row"
     assert "fsdp_two_phase_ratio" in quick["lm_step"]
+
+
+def test_bench_quick_tracks_rebalance_row():
+    """The committed trajectory must carry the dynamic re-partitioning drill
+    (PR 9 onward): static uniform cut (two_phase slot) vs measured-cost
+    re-cut (hdot slot) steps/s under one jax device — the parallelism is OS
+    processes. The drill converges near the weighted-balance bound, so the
+    committed ratio must show a real recovery, not noise."""
+    from benchmarks import docs_sync
+
+    quick = docs_sync.load_quick()
+    rows = quick["rebalance"]["rows"]
+    assert rows, "rebalance suite lost its rows"
+    assert all(r["metric"] == "steps_per_s" for r in rows), rows
+    assert all(r["devices"] == 1 for r in rows), rows
+    assert quick["rebalance"]["hdot_two_phase_ratio"] > 1.2, quick["rebalance"]
+
+
+def test_overlap_doc_covers_rebalancing():
+    text = (REPO / "docs" / "overlap.md").read_text()
+    for ref in ("rebalance_every", "chunk_weights", "CostModel",
+                "straggler_drill", "heat2d_weighted", "part_extents",
+                "reassign_host_shards"):
+        assert ref in text, f"docs/overlap.md lost {ref}"
