@@ -9,6 +9,13 @@ capacity-chunked a2a_scan (moe_a2a_chunks=2) vs monolithic dispatch/combine
 ratio, gated exactly like the halo/grad-sync suites. Suites that errored
 fail the gate outright.
 
+The ``fsdp_mem`` suite (streaming ZeRO-3 memory probe) carries its own
+gates, independent of ``--min-ratio``: ``mem_saving_ratio`` must exceed 1
+(the streaming schedule's peak live param bytes strictly below the
+gather-all peak), every row's streaming peak must sit within
+shard + fsdp_working_set bucket widths, and the two schedules' losses must
+be bit-identical.
+
 Run:  python -m benchmarks.ci_gate [--min-ratio 1.0] [--path BENCH_quick.json]
 """
 from __future__ import annotations
@@ -34,6 +41,20 @@ def check(quick: dict, min_ratio: float) -> list:
         for key in HEADLINE_KEYS:
             if key in rec and rec[key] < min_ratio:
                 bad.append(f"{suite}.{key} = {rec[key]:.3f} < {min_ratio}")
+        # streaming ZeRO-3 memory headline is gated on its own invariant,
+        # independent of --min-ratio: the streaming peak must sit strictly
+        # below the gather-all peak (ratio > 1), or streaming is pointless
+        if "mem_saving_ratio" in rec and rec["mem_saving_ratio"] <= 1.0:
+            bad.append(f"{suite}.mem_saving_ratio = "
+                       f"{rec['mem_saving_ratio']:.3f} <= 1.0 — streaming "
+                       "peak live bytes is not below gather-all")
+        for row in rec.get("rows", []):
+            if row.get("loss_bit_equal") is False:
+                bad.append(f"{suite}: streaming loss is not bit-identical "
+                           "to gather-all")
+            if row.get("within_working_set_bound") is False:
+                bad.append(f"{suite}: streaming peak exceeds shard + "
+                           "fsdp_working_set buckets")
     return bad
 
 
@@ -46,7 +67,8 @@ def main() -> int:
     args = ap.parse_args()
     quick = json.loads(args.path.read_text())
     for suite, rec in sorted(quick.items()):
-        heads = {k: round(rec[k], 3) for k in HEADLINE_KEYS if k in rec}
+        heads = {k: round(rec[k], 3)
+                 for k in HEADLINE_KEYS + ("mem_saving_ratio",) if k in rec}
         print(f"[ci_gate] {suite}: {heads or rec.get('error', 'no rows')}")
     bad = check(quick, args.min_ratio)
     if bad:

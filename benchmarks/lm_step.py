@@ -169,6 +169,109 @@ def plain_ref(g, mesh2):
         in_specs=P(), out_specs=P(), check_vma=False))(g)
 
 
+def mem_worker(devices: int, steps: int) -> Dict[str, Any]:
+    """Streaming ZeRO-3 memory probe: per-device peak LIVE parameter bytes,
+    streaming vs gather-all, from the pre-optimization HLO live-interval
+    model — each gathered buffer is live from its all-gather to its last
+    compute consumer (the same spans AG-ADJACENCY lints; see
+    analysis.rules.buckets.ag_live_spans), and peak live param bytes =
+    persistent shard bytes + the largest simultaneous gathered set. The
+    streaming peak must sit within shard + a 2-bucket working set; the
+    gather-all peak carries every bucket at once. Losses are compared
+    BIT-exactly across the two schedules — streaming moves WHEN buffers are
+    gathered, never what is computed."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.analysis.hlo_ir import parse_hlo_module
+    from repro.analysis.rules.base import LintContext
+    from repro.analysis.rules.buckets import ag_live_spans
+    from repro.config.base import ParallelConfig
+    from repro.config.registry import get_arch
+    from repro.core.overlap import fsdp_stream
+    from repro.launch.mesh import make_mesh
+    from repro.launch.steps import (fsdp_init_state, fsdp_layout_for,
+                                    make_fsdp_train_step)
+    from repro.models.model import ModelOptions, build_model
+
+    mesh = make_mesh((devices,), ("data",))
+    cfg = get_arch("qwen3-8b").reduced()
+    # matched options so both lowerings are numerically the same program:
+    # unfused xent (the streamed loss uses the log_softmax path), full remat
+    opts = ModelOptions(attn_impl="dense", scan_layers=False, remat="full",
+                        fused_xent=False)
+    model = build_model(cfg, opts)
+    B, S = 2 * devices, 32
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+             "targets": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+
+    def peak_gathered_bytes(text: str) -> Dict[str, float]:
+        module = parse_hlo_module(text)
+        spans = ag_live_spans(module, LintContext())
+        peak, count = 0.0, 0
+        for comp, ag, start, _ in spans:
+            live = sum(s.result_bytes() for c, s, b, e in spans
+                       if c.name == comp.name and b <= start < e)
+            if live > peak:
+                peak, count = live, sum(
+                    1 for c, _, b, e in spans
+                    if c.name == comp.name and b <= start < e)
+        return {"bytes": peak, "buffers": count, "n_ag": len(spans)}
+
+    out: Dict[str, Any] = {"devices": devices, "arch": cfg.name,
+                           "batch": B, "seq": S}
+    losses = {}
+    for name, par in {
+        "streaming": ParallelConfig(param_shard=True, fsdp_streaming=True,
+                                    scan_layers=False, remat="full"),
+        "gather_all": ParallelConfig(param_shard=True, scan_layers=False,
+                                     remat="full", bucket_order="layer"),
+    }.items():
+        layout, sync_axes = fsdp_layout_for(model, par, mesh)
+        step = make_fsdp_train_step(model, par, mesh, layout=layout)
+        jitted = jax.jit(step, donate_argnums=(0, 1))
+        pflat, opt, _ = fsdp_init_state(model, par, mesh,
+                                        jax.random.PRNGKey(0))
+        text = (jitted.lower(pflat, opt, batch)
+                .compiler_ir(dialect="hlo").as_hlo_text())
+        peak = peak_gathered_bytes(text)
+        shard = layout.shard_bytes()
+        row = {"shard_bytes": shard,
+               "peak_gathered_bytes": peak["bytes"],
+               "peak_gathered_buffers": peak["buffers"],
+               "all_gather_ops": peak["n_ag"],
+               "peak_live_param_bytes": shard + peak["bytes"]}
+        if par.fsdp_streaming:
+            stream = fsdp_stream(layout, model.param_layers(), sync_axes)
+            bucket = max(sum(g.padded * jnp.dtype(g.dtype).itemsize
+                             for g in stream.groups_at(d))
+                         for d in stream.depths)
+            row["working_set_bound_bytes"] = (
+                shard + par.fsdp_working_set * bucket)
+            row["within_bound"] = (row["peak_live_param_bytes"]
+                                   <= row["working_set_bound_bytes"])
+        _, _, metrics = jitted(pflat, opt, batch)
+        losses[name] = np.asarray(metrics["loss"]).tobytes()
+        row["loss"] = float(metrics["loss"])
+        out[name] = row
+    out["loss_bit_equal"] = losses["streaming"] == losses["gather_all"]
+    out["mem_saving_ratio"] = (out["gather_all"]["peak_live_param_bytes"]
+                               / out["streaming"]["peak_live_param_bytes"])
+    return out
+
+
+def run_mem(sizes=(4,), steps: int = 1) -> Dict[str, Any]:
+    from benchmarks._util import run_worker
+
+    rows = [run_worker("benchmarks.lm_step", d, ["--mem", "--devices",
+                                                 str(d)])
+            for d in sizes]
+    return {"table": "Streaming ZeRO-3 peak live param bytes "
+                     "(streaming vs gather-all)", "rows": rows}
+
+
 def moe_worker(devices: int, steps: int) -> Dict[str, Any]:
     import jax
     import numpy as np
@@ -255,6 +358,9 @@ def main() -> None:
     ap.add_argument("--worker", action="store_true")
     ap.add_argument("--moe", action="store_true",
                     help="MoE EP a2a bench instead of the grad-sync bench")
+    ap.add_argument("--mem", action="store_true",
+                    help="streaming ZeRO-3 peak-live-bytes probe instead of "
+                         "the grad-sync bench")
     ap.add_argument("--devices", type=int, default=2)
     ap.add_argument("--steps", type=int, default=3)
     args = ap.parse_args()
@@ -262,7 +368,18 @@ def main() -> None:
         from benchmarks._util import emit
 
         emit(moe_worker(args.devices, args.steps) if args.moe
+             else mem_worker(args.devices, args.steps) if args.mem
              else worker(args.devices, args.steps))
+        return
+    if args.mem:
+        rec = run_mem()
+        for r in rec["rows"]:
+            print(f"devices={r['devices']} "
+                  f"streaming peak {r['streaming']['peak_live_param_bytes']}"
+                  f" B vs gather-all "
+                  f"{r['gather_all']['peak_live_param_bytes']} B "
+                  f"({r['mem_saving_ratio']:.2f}x, "
+                  f"bit_equal={r['loss_bit_equal']})")
         return
     if args.moe:
         rec = run_moe()

@@ -55,6 +55,7 @@ SUITES = {
         n=1024 if quick else 2048),
     "lm_step": lambda quick: lm_step.run(sizes=(2,) if quick else (2, 8)),
     "lm_moe": lambda quick: lm_step.run_moe(sizes=(2,) if quick else (2, 4)),
+    "fsdp_mem": lambda quick: lm_step.run_mem(sizes=(4,)),
     "serve": lambda quick: serve.run(quick=quick),
     "rebalance": lambda quick: rebalance.run(
         configs=((4, 3.0),) if quick else ((4, 3.0), (4, 5.0), (8, 3.0)),
@@ -66,7 +67,7 @@ SUITES = {
 QUICK_KEYS = {"table2_heat2d": "heat2d", "table4_creams": "creams",
               "hpccg": "hpccg", "bench_overlap": "overlap",
               "lm_step": "lm_step", "lm_moe": "moe", "serve": "serve",
-              "rebalance": "rebalance"}
+              "rebalance": "rebalance", "fsdp_mem": "fsdp_mem"}
 
 
 def _schedule_rates(row: dict):
@@ -98,6 +99,21 @@ def _quick_record(records: dict) -> dict:
             continue
         rows = []
         for r in rec.get("rows", []):
+            if "streaming" in r:   # fsdp_mem peak-live-bytes probe row
+                row = {"devices": r.get("devices"),
+                       "metric": "peak_live_param_bytes",
+                       "streaming": r["streaming"]["peak_live_param_bytes"],
+                       "gather_all": r["gather_all"]["peak_live_param_bytes"],
+                       "shard_bytes": r["streaming"]["shard_bytes"],
+                       "within_working_set_bound":
+                           r["streaming"].get("within_bound"),
+                       "loss_bit_equal": r.get("loss_bit_equal"),
+                       "mem_saving_ratio": r["mem_saving_ratio"]}
+                for k in ("jax_version", "device_count"):
+                    if k in r:
+                        row[k] = r[k]
+                rows.append(row)
+                continue
             rates = _schedule_rates(r)
             if rates is None:
                 continue
@@ -123,7 +139,8 @@ def _quick_record(records: dict) -> dict:
         # headline stays the largest 1-D row (comparable across PRs, PR 2
         # onward); 2-D / 3-D mesh rows get their own headline so each
         # topology gap is tracked without redefining the original trajectory
-        slab = [r for r in rows if "mesh_shape" not in r]
+        slab = [r for r in rows
+                if "mesh_shape" not in r and "hdot_two_phase_ratio" in r]
         mesh2 = [r for r in rows if r.get("mesh_shape", "").count("x") == 1]
         mesh3 = [r for r in rows if r.get("mesh_shape", "").count("x") == 2]
         if slab:
@@ -135,6 +152,9 @@ def _quick_record(records: dict) -> dict:
         fsdp = [r for r in rows if "fsdp_two_phase_ratio" in r]
         if fsdp:   # lm_step ZeRO-3 headline, gated like the others
             entry["fsdp_two_phase_ratio"] = fsdp[-1]["fsdp_two_phase_ratio"]
+        mem = [r for r in rows if "mem_saving_ratio" in r]
+        if mem:    # streaming ZeRO-3 memory headline (ci_gate: must be > 1)
+            entry["mem_saving_ratio"] = mem[-1]["mem_saving_ratio"]
         out[short] = entry
     return out
 
@@ -154,6 +174,17 @@ def _summary_md(records: dict) -> str:
             for r in rows:
                 lines.append(f"| {r['ranks']} | {r['halo_pct']} | "
                              f"{r['paper_pct']} | {r['match']} |")
+        elif rows and "streaming" in rows[0]:
+            lines.append("| devices | streaming peak bytes | "
+                         "gather-all peak bytes | saving | bit-equal |")
+            lines.append("|---|---|---|---|---|")
+            for r in rows:
+                lines.append(
+                    f"| {r['devices']} | "
+                    f"{r['streaming']['peak_live_param_bytes']} | "
+                    f"{r['gather_all']['peak_live_param_bytes']} | "
+                    f"{r['mem_saving_ratio']:.2f}x | "
+                    f"{r['loss_bit_equal']} |")
         elif rows and "two_phase" in rows[0]:
             key = _schedule_rates(rows[0])[0]
             lines.append(f"| devices | two_phase {key} | hdot {key} | "

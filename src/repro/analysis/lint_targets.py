@@ -444,6 +444,97 @@ def _lm_fsdp_1d() -> Target:
                   ctx)
 
 
+def _lm_fsdp_streaming_pieces(streaming: bool):
+    """Shared lowering for the streaming target and its gather-all mutation
+    fixture: SAME per-layer layout, SAME model options; only the gather
+    placement differs (inside each consuming layer's remat region vs a
+    top-of-step gather-all)."""
+    import jax
+
+    from repro.config.base import ParallelConfig
+    from repro.launch.steps import fsdp_layout_for, make_fsdp_train_step
+    from repro.models.model import ModelOptions
+    from repro.optim import adamw_init
+
+    par = ParallelConfig(param_shard=True, fsdp_streaming=streaming,
+                         scan_layers=False, remat="full",
+                         bucket_order="layer")
+    trainer, mesh = _lm_trainer(par, (4,), ("data",))
+    trainer.options = ModelOptions(attn_impl="dense", scan_layers=False,
+                                   remat="full", fused_xent=False)
+    from repro.models.model import build_model
+
+    trainer.model = build_model(trainer.run.model, trainer.options)
+    layout, _ = fsdp_layout_for(trainer.model, par, mesh)
+    step_fn = make_fsdp_train_step(trainer.model, par, mesh,
+                                   trainer.opt_cfg, layout=layout)
+    jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    pflat = {g.key: jax.ShapeDtypeStruct((g.padded,), g.dtype)
+             for g in layout.groups}
+    ospec = jax.eval_shape(adamw_init, pflat)
+    _, _, bspec = _lm_specs(trainer)
+    n = layout.n_shards
+    budget: Dict[str, int] = {}
+    for g in layout.groups:
+        dt = hlo_dtype(g.dtype)
+        budget[dt] = budget.get(dt, 0) + g.padded // n
+    return (jitted, pflat, ospec, bspec, layout, budget, par, trainer.model)
+
+
+@target("lm_fsdp_streaming")
+def _lm_fsdp_streaming() -> Target:
+    """Streaming ZeRO-3 step: per-layer AG at point of use, regathered in the
+    backward — pending-gather working set bounded by fsdp_working_set."""
+    from repro.core.overlap import fsdp_stream
+
+    jitted, pflat, ospec, bspec, layout, budget, par, model = (
+        _lm_fsdp_streaming_pieces(True))
+    n = layout.n_shards
+    fwd = [g.padded for g in layout.groups]
+    # the backward regathers every LAYER bucket in reverse layer order
+    # (within a layer the remat retrace keeps forward order); the embed and
+    # head buckets gather once — the take-backward never needs the table
+    # primal and the head weight's residual spans only the forward/backward
+    # boundary (models.model.train_loss_streamed)
+    stream = fsdp_stream(layout, model.param_layers(), ("data",))
+    layer_depths = [d for d in stream.depths
+                    if d not in (0, max(stream.depths))]
+    bwd = [g.padded for d in reversed(layer_depths)
+           for g in stream.groups_at(d)]
+    # RS emission = AD transpose order: head buckets first (their gathers
+    # are the last forward consumers), then each layer's buckets as its
+    # remat region replays (within-depth forward order), embed last
+    rs = [g.padded // n
+          for d in reversed(stream.depths) for g in stream.groups_at(d)]
+    ctx = LintContext(
+        target="lm_fsdp_streaming", expected_permute_total=0,
+        expected_rs_elements=rs,
+        expected_ag_elements=fwd + bwd,
+        wire_dtype_elements=budget, expect_donation=True,
+        extra={"fsdp_working_set": par.fsdp_working_set})
+    return Target("lm_fsdp_streaming",
+                  _pre_opt_text(jitted, pflat, ospec, bspec), ctx)
+
+
+@broken("broken_gather_all_streaming")
+def _broken_gather_all_streaming() -> Target:
+    """Top-of-step gather-all on the SAME per-layer layout: every bucket's
+    AG is pending at once, so only AG-ADJACENCY trips (the ctx expectations
+    match this lowering's own emission: one AG per bucket forward-order, RS
+    reversed)."""
+    jitted, pflat, ospec, bspec, layout, budget, par, _ = (
+        _lm_fsdp_streaming_pieces(False))
+    n = layout.n_shards
+    ctx = LintContext(
+        target="broken_gather_all_streaming", expected_permute_total=0,
+        expected_rs_elements=[g.padded // n for g in reversed(layout.groups)],
+        expected_ag_elements=[g.padded for g in layout.groups],
+        wire_dtype_elements=budget, expect_donation=True,
+        extra={"fsdp_working_set": par.fsdp_working_set})
+    return Target("broken_gather_all_streaming",
+                  _pre_opt_text(jitted, pflat, ospec, bspec), ctx)
+
+
 # ------------------------------------------------------------- moe EP a2a
 def _lm_moe_grad_target(name: str, a2a_chunks: int) -> Target:
     """value_and_grad of the MoE EP layer (the same program

@@ -6,8 +6,8 @@ structured findings out. Register new rules by appending to ``ALL_RULES``.
 """
 from repro.analysis.rules.base import (Finding, LintContext, Rule, Severity,
                                        annotate_wire_bytes)
-from repro.analysis.rules.buckets import (BucketOrderRule, DonationLostRule,
-                                          OneRsOneAgRule)
+from repro.analysis.rules.buckets import (AgAdjacencyRule, BucketOrderRule,
+                                          DonationLostRule, OneRsOneAgRule)
 from repro.analysis.rules.schedule import (DeadDrainRule, NoOverlapWindowRule,
                                            PairCountRule)
 from repro.analysis.rules.wire import WireWidenRule
@@ -19,6 +19,7 @@ ALL_RULES = (
     OneRsOneAgRule(),
     WireWidenRule(),
     NoOverlapWindowRule(),
+    AgAdjacencyRule(),
     DonationLostRule(),
 )
 
@@ -28,5 +29,5 @@ __all__ = [
     "ALL_RULES", "RULES_BY_ID", "Finding", "LintContext", "Rule", "Severity",
     "annotate_wire_bytes", "DeadDrainRule", "PairCountRule", "BucketOrderRule",
     "OneRsOneAgRule", "WireWidenRule", "NoOverlapWindowRule",
-    "DonationLostRule",
+    "AgAdjacencyRule", "DonationLostRule",
 ]

@@ -17,7 +17,8 @@ from __future__ import annotations
 from collections import Counter
 from typing import List, Optional, Sequence, Tuple
 
-from repro.analysis.hlo_ir import HloInstruction, HloModule
+from repro.analysis.hlo_ir import (HloComputation, HloInstruction, HloModule,
+                                   is_compute)
 from repro.analysis.rules.base import (Finding, LintContext, Rule,
                                        sized_collectives)
 
@@ -105,6 +106,88 @@ class BucketOrderRule(Rule):
         out = self._check_seq(rs, ctx.expected_rs_elements, "reduce-scatter")
         out += self._check_seq(ag, ctx.expected_ag_elements, "all-gather")
         out += self._check_seq(ar, ctx.expected_ar_elements, "all-reduce")
+        return out
+
+
+def ag_live_spans(module: HloModule, ctx: LintContext
+                  ) -> List[Tuple[object, HloInstruction, int, int]]:
+    """Live span of every sized all-gather's result: ``(comp, ag, def_line,
+    last_compute_line)``, the last consumer reached through non-compute data
+    movement (unpack slices/reshapes, tuple plumbing, async -done halves).
+    Shared by AG-ADJACENCY and the ``fsdp_mem`` benchmark probe — the lint
+    bounds the COUNT of simultaneously live gathered buffers, the probe sums
+    their BYTES."""
+    by_comp: dict = {}
+    for comp, instr in sized_collectives(module, ["all-gather"], ctx):
+        by_comp.setdefault(comp.name, (comp, []))[1].append(instr)
+    spans: List[Tuple[object, HloInstruction, int, int]] = []
+    for comp, ags in by_comp.values():
+        users = comp.users_map()
+        for ag in ags:
+            seen = {ag.name}
+            frontier = [ag.name]
+            last: Optional[int] = None
+            while frontier:
+                name = frontier.pop()
+                for user in users.get(name, ()):
+                    if user.name in seen:
+                        continue
+                    seen.add(user.name)
+                    if is_compute(module, user):
+                        if last is None or user.line_no > last:
+                            last = user.line_no
+                    else:
+                        frontier.append(user.name)
+            if last is not None and last > ag.line_no:
+                spans.append((comp, ag, ag.line_no, last))
+    return spans
+
+
+class AgAdjacencyRule(Rule):
+    """Streaming ZeRO-3 working-set bound: each FSDP all-gather must be
+    *dataflow-adjacent* to the layer that consumes it — the gathered buffer
+    is live from the gather until its LAST compute consumer (reached through
+    the unpack slices/reshapes), and at most ``fsdp_working_set`` gathered
+    flat buffers may be live at once. Streaming satisfies this because the
+    backward REGATHERS each layer's bucket inside its remat region, so every
+    forward gather dies within its own layer. A top-of-step gather-all
+    schedule keeps every gathered buffer live into the backward (the weights
+    are grad residuals), so all of them overlap and this rule trips — the
+    invariant a first-consumer check cannot see, since the HLO printer sinks
+    each instruction next to its first use.
+
+    Active only when ``ctx.extra['fsdp_working_set']`` is set (the max
+    number of simultaneously live gathered flat buffers).
+    """
+    id = "AG-ADJACENCY"
+    fix_hint = ("gather each bucket at its consuming layer and regather in "
+                "the backward (fsdp_streaming=True routes materialization "
+                "through core.overlap.FsdpStream inside the layer's remat "
+                "region) instead of fsdp_all_gather for the whole layout "
+                "up front")
+
+    def check(self, module: HloModule, ctx: LintContext) -> List[Finding]:
+        limit = ctx.extra.get("fsdp_working_set")
+        if limit is None:
+            return []
+        by_comp: dict = {}
+        for comp, ag, start, end in ag_live_spans(module, ctx):
+            by_comp.setdefault(comp.name, (comp, []))[1].append(
+                (ag, start, end))
+        out: List[Finding] = []
+        for comp, spans in by_comp.values():
+            peak, peak_ag = 0, None
+            for ag, start, _ in spans:   # live count only rises at a gather
+                live = sum(1 for _, s, e in spans if s <= start < e)
+                if live > peak:
+                    peak, peak_ag = live, ag
+            if peak > limit:
+                out.append(self.op_finding(
+                    f"{peak} gathered FSDP buffers live at once (working-set "
+                    f"limit {limit}): gathered params survive to backward "
+                    f"consumers instead of dying within their layer — a "
+                    f"top-of-step gather-all schedule, not streaming",
+                    comp, peak_ag))
         return out
 
 

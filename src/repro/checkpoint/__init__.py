@@ -2,6 +2,7 @@ from repro.checkpoint.checkpointer import (
     AsyncCheckpointer,
     latest_step,
     restore_checkpoint,
+    restore_fsdp_checkpoint,
     save_checkpoint,
 )
 from repro.checkpoint.elastic import reshard
@@ -10,6 +11,7 @@ __all__ = [
     "AsyncCheckpointer",
     "latest_step",
     "restore_checkpoint",
+    "restore_fsdp_checkpoint",
     "save_checkpoint",
     "reshard",
 ]

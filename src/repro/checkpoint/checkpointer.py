@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 from typing import Any, Dict, Optional, Tuple
@@ -27,6 +28,8 @@ import numpy as np
 
 PyTree = Any
 _SEP = "|"
+# ZeRO-3 flat-buffer key shape (core.overlap.FsdpGroup.key): bucket + dtype
+_BUCKET_KEY = re.compile(r"^b\d+_\w+$")
 
 
 def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
@@ -53,17 +56,34 @@ def _path_str(p) -> str:
     return str(p)
 
 
+def _bucket_keys(keys) -> Tuple[str, ...]:
+    """The FSDP flat-buffer names among `keys` (path segments like
+    ``b03_bfloat16``) — the part of the tree that is layout-dependent."""
+    return tuple(sorted({seg for k in keys for seg in k.split(_SEP)
+                         if _BUCKET_KEY.match(seg)}))
+
+
 def _unflatten_into(target: PyTree, arrays: Dict[str, np.ndarray]) -> PyTree:
     paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+    want = [_SEP.join(_path_str(p) for p in path) for path, _ in paths]
     leaves = []
-    for path, leaf in paths:
-        key = _SEP.join(_path_str(p) for p in path)
+    for key, (path, leaf) in zip(want, paths):
         if key not in arrays:
+            want_b, have_b = _bucket_keys(want), _bucket_keys(arrays)
+            if want_b and have_b and want_b != have_b:
+                raise ValueError(
+                    f"checkpoint FSDP layout mismatch: the restore target "
+                    f"expects flat buffers {list(want_b)} but the checkpoint "
+                    f"holds {list(have_b)} — a grad_buckets / bucket_order / "
+                    "mesh-size change re-cuts the layout. Import the "
+                    "checkpoint with checkpoint.restore_fsdp_checkpoint "
+                    "(unshards with the OLD FsdpLayout, reshards with the "
+                    "new) instead of restoring it structurally.")
             raise KeyError(f"checkpoint missing leaf {key!r}")
         arr = arrays[key]
-        want = getattr(leaf, "dtype", None)
-        if want is not None and arr.dtype != want:
-            arr = arr.astype(want)
+        dtype = getattr(leaf, "dtype", None)
+        if dtype is not None and arr.dtype != dtype:
+            arr = arr.astype(dtype)
         leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
@@ -128,6 +148,45 @@ def restore_checkpoint(directory: str, target: PyTree,
     if shardings is not None:
         tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
     return int(meta["step"]), tree, meta.get("extra", {})
+
+
+def restore_fsdp_checkpoint(directory: str, old_layout, new_layout,
+                            step: Optional[int] = None, sharding=None
+                            ) -> Tuple[int, PyTree, Dict]:
+    """Re-layout import path for ZeRO-3 trainer state: restore a checkpoint
+    written under `old_layout` (some grad_buckets / bucket_order / mesh size)
+    and re-cut its flat buffers — params AND f32 optimizer moments — into
+    `new_layout` (core.overlap.fsdp_relayout: unshard with the OLD layout,
+    reshard with the NEW). Bit-exact: only pad elements are dropped/re-added.
+
+    Returns ``(step, {"params": flat, "opt": {...}}, extra)`` keyed by the
+    NEW layout. With `sharding` (one NamedSharding, typically
+    ``P(dp_axes)``), every flat buffer is placed on it."""
+    import jax.numpy as jnp
+
+    from repro.core.overlap import fsdp_relayout
+
+    def flat_target(layout, dtype=None):
+        return {g.key: jax.ShapeDtypeStruct((g.padded,),
+                                            jnp.dtype(dtype or g.dtype))
+                for g in layout.groups}
+
+    target = {"params": flat_target(old_layout),
+              "opt": {"m": flat_target(old_layout, np.float32),
+                      "v": flat_target(old_layout, np.float32),
+                      "step": jax.ShapeDtypeStruct((), np.int32)}}
+    step, tree, extra = restore_checkpoint(directory, target, step)
+    out = {"params": fsdp_relayout(tree["params"], old_layout, new_layout),
+           "opt": {"m": fsdp_relayout(tree["opt"]["m"], old_layout, new_layout),
+                   "v": fsdp_relayout(tree["opt"]["v"], old_layout, new_layout),
+                   "step": jnp.asarray(tree["opt"]["step"])}}
+    if sharding is not None:
+        out["params"] = {k: jax.device_put(v, sharding)
+                         for k, v in out["params"].items()}
+        for mom in ("m", "v"):
+            out["opt"][mom] = {k: jax.device_put(v, sharding)
+                               for k, v in out["opt"][mom].items()}
+    return step, out, extra
 
 
 class AsyncCheckpointer:

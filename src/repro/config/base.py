@@ -242,6 +242,18 @@ class ParallelConfig:
     # buckets forward-order and reduce-scatters them reverse-topologically.
     # Requires the explicit-schedule (DP-only mesh) step.
     param_shard: bool = False
+    # Streaming ZeRO-3: cut ONE bucket per layer (bucket_order forced to
+    # 'layer') and emit each bucket's all-gather inside the remat region of
+    # the layer that consumes it — the gathered buffer dies after that
+    # layer's forward and the backward REGATHERS it in reverse order, so
+    # peak live params ≈ shard + fsdp_working_set buckets instead of the
+    # full tree. Needs param_shard=True and scan_layers=False (layer
+    # boundaries must be visible to the gather schedule).
+    fsdp_streaming: bool = False
+    # Bound on simultaneously-live gathered buckets the streaming schedule
+    # promises (head bucket + the layer in flight). The lint target and the
+    # memory probe assert it; the step itself emits gathers point-of-use.
+    fsdp_working_set: int = 2
     scan_layers: bool = True
     remat: str = "full"                # 'none' | 'full' | 'dots'
     # gradient accumulation microbatches (1 = no accumulation)
@@ -265,6 +277,25 @@ class ParallelConfig:
         if self.rebalance_every < 0:
             raise ValueError(
                 f"rebalance_every must be >= 0, got {self.rebalance_every}")
+        if self.fsdp_working_set < 1:
+            raise ValueError(
+                f"fsdp_working_set must be >= 1, got {self.fsdp_working_set}")
+        if self.fsdp_streaming and not self.param_shard:
+            raise ValueError(
+                "fsdp_streaming=True needs param_shard=True (it is a "
+                "schedule for the ZeRO-3 flat-shard step)")
+        if self.fsdp_streaming and self.scan_layers:
+            raise ValueError(
+                "fsdp_streaming=True needs scan_layers=False: per-layer "
+                "gather placement requires the unrolled stack (the scanned "
+                "lowering streams via stack_apply's scan-carried gather)")
+        if self.fsdp_streaming and self.remat != "full":
+            raise ValueError(
+                "fsdp_streaming=True needs remat='full': the backward must "
+                "REGATHER each layer's bucket inside its remat region "
+                "('none' would keep every gathered buffer live to its "
+                "backward use; 'dots' saves the gathered dot operands — "
+                "both forfeit the streaming memory bound)")
 
 
 @dataclass(frozen=True)

@@ -68,6 +68,10 @@ def make_buckets(tree: PyTree, num_buckets: int,
                       complete earliest in the backward pass is emitted first,
                       so its collective overlaps the remaining backward.
       'tree'          shallowest first (forward/tree order).
+      'layer'         one bucket PER distinct depth, shallowest first — the
+                      per-layer cut streaming ZeRO-3 needs so each bucket's
+                      all-gather can be emitted just before the single layer
+                      that consumes it (`num_buckets` is ignored).
     """
     leaves = jax.tree.leaves(tree)
     if not leaves:
@@ -84,7 +88,7 @@ def make_buckets(tree: PyTree, num_buckets: int,
             load[b] += sz
         return [[(i, leaves[i]) for i in sorted(b)] for b in buckets if b]
 
-    if order not in ("reverse_topo", "tree"):
+    if order not in ("reverse_topo", "tree", "layer"):
         raise ValueError(f"unknown bucket order {order!r}")
     tags = jax.tree.leaves(layers)
     if len(tags) != len(leaves):
@@ -94,6 +98,9 @@ def make_buckets(tree: PyTree, num_buckets: int,
     by_depth: Dict[int, List[int]] = {}
     for i, t in enumerate(tags):
         by_depth.setdefault(int(t), []).append(i)
+    if order == "layer":
+        return [[(i, leaves[i]) for i in sorted(by_depth[d])]
+                for d in sorted(by_depth)]
     depths = sorted(by_depth, reverse=(order == "reverse_topo"))
     total = sum(_leaf_size(leaves[i]) for i in range(len(leaves)))
     # contiguous partition of the depth sequence: group g goes to the bucket
@@ -327,6 +334,95 @@ def fsdp_all_gather(local: Dict[str, jax.Array], layout: FsdpLayout,
         full = lax.all_gather(local[g.key], axes, axis=0, tiled=True)
         _unpack_group(full, g, out)
     return jax.tree.unflatten(layout.treedef, out)
+
+
+def fsdp_relayout(flat: Dict[str, jax.Array], old: FsdpLayout,
+                  new: FsdpLayout) -> Dict[str, jax.Array]:
+    """Re-cut flat FSDP buffers from one layout to another — the checkpoint
+    portability path: a committed checkpoint written under `old` (some
+    `grad_buckets` / `bucket_order` / mesh size) is imported under `new` by
+    unsharding with the OLD layout and resharding with the NEW. Works for
+    optimizer-moment buffers too: dtypes follow the buffers, not the layout,
+    so f32 moments stay f32 through the re-cut. Bit-exact: unpacking drops
+    only pad elements and repacking re-pads with zeros."""
+    if old.num_leaves != new.num_leaves:
+        raise ValueError(
+            f"cannot re-layout: old layout has {old.num_leaves} leaves, new "
+            f"has {new.num_leaves} — the parameter tree itself changed")
+    leaves = jax.tree.leaves(fsdp_unshard_full(flat, old))
+    return {g.key: _pack_group(leaves, g) for g in new.groups}
+
+
+# ------------------------------------------------- streaming ZeRO-3 schedule
+@dataclass(frozen=True)
+class FsdpStream:
+    """Gather/free schedule for streaming ZeRO-3: the layer→bucket map.
+
+    Built from a per-layer layout (``order='layer'``) plus the same
+    layer-provenance tree that cut it, this maps each forward depth to the
+    flat buffers holding exactly that depth's parameters. The streamed step
+    calls :meth:`materialize` INSIDE each layer's remat region, so a bucket's
+    all-gather is emitted just before the first (and only) layer that consumes
+    it, the gathered buffer dies at the end of the layer's forward, and the
+    backward's rematerialization re-emits the gathers in REVERSE layer order —
+    peak live params ≈ shard + a 2-bucket working set instead of the full
+    tree. AD transposes each tiled ``lax.all_gather`` into a tiled
+    ``lax.psum_scatter``, so per-bucket reduce-scatters are emitted
+    last-backward-first automatically (no explicit ``grad_sync_fsdp``)."""
+
+    layout: FsdpLayout
+    axes: AxisNames
+    depth_groups: Tuple[Tuple[int, Tuple[FsdpGroup, ...]], ...]
+
+    @property
+    def depths(self) -> Tuple[int, ...]:
+        """Forward depths with parameters, shallowest first."""
+        return tuple(d for d, _ in self.depth_groups)
+
+    def groups_at(self, *depths: int) -> Tuple[FsdpGroup, ...]:
+        by_depth = dict(self.depth_groups)
+        return sum((by_depth.get(d, ()) for d in depths), ())
+
+    def flat_at(self, pflat: Dict[str, jax.Array],
+                *depths: int) -> Dict[str, jax.Array]:
+        """The shard-resident sub-dict feeding `depths`' remat region (its
+        residuals: the backward regathers from these, not from the full)."""
+        return {g.key: pflat[g.key] for g in self.groups_at(*depths)}
+
+    def materialize(self, flat: Dict[str, jax.Array], *depths: int) -> PyTree:
+        """All-gather the buffers of `depths` and unpack them into a params
+        tree with ``None`` holes everywhere else. Call inside the consuming
+        remat region: trace order puts each gather next to its layer."""
+        out: List[Any] = [None] * self.layout.num_leaves
+        for g in self.groups_at(*depths):
+            full = lax.all_gather(flat[g.key], self.axes, axis=0, tiled=True)
+            _unpack_group(full, g, out)
+        return jax.tree.unflatten(self.layout.treedef, out)
+
+
+def fsdp_stream(layout: FsdpLayout, layers: PyTree,
+                axes: AxisNames) -> FsdpStream:
+    """Build the streaming gather/free schedule from a per-layer layout and
+    its layer-provenance tree. Every buffer must cover exactly ONE forward
+    depth (build the layout with ``order='layer'``)."""
+    tags = jax.tree.leaves(layers)
+    if len(tags) != layout.num_leaves:
+        raise ValueError(
+            f"layer-provenance tree has {len(tags)} leaves but the layout "
+            f"packs {layout.num_leaves}")
+    depth_groups: Dict[int, List[FsdpGroup]] = {}
+    for g in layout.groups:
+        ds = sorted({int(tags[i]) for i in g.leaf_idx})
+        if len(ds) != 1:
+            raise ValueError(
+                f"streaming ZeRO-3 needs per-layer buckets: buffer {g.key} "
+                f"spans forward depths {ds} — cut the layout with "
+                "order='layer'")
+        depth_groups.setdefault(ds[0], []).append(g)
+    return FsdpStream(
+        layout=layout, axes=axes,
+        depth_groups=tuple((d, tuple(depth_groups[d]))
+                           for d in sorted(depth_groups)))
 
 
 def grad_sync_fsdp(grads: PyTree, layout: FsdpLayout,

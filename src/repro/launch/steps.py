@@ -18,7 +18,7 @@ from repro.checkpoint.elastic import shardings_for
 from repro.config.base import ModelConfig, ParallelConfig
 from repro.config.shapes import ShapeConfig
 from repro.core.overlap import (FsdpLayout, accumulate_grads, fsdp_all_gather,
-                                fsdp_layout, fsdp_shard_full, grad_sync_fsdp)
+                                fsdp_layout, fsdp_stream, grad_sync_fsdp)
 from repro.models.model import LanguageModel, ModelOptions, build_model, input_specs
 from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
 from repro.sharding.rules import ShardingContext, use_sharding
@@ -141,16 +141,18 @@ def fsdp_layout_for(model: LanguageModel, parallel: ParallelConfig,
                     mesh) -> Tuple[FsdpLayout, Tuple[str, ...]]:
     """The bucket-wise flat-buffer layout of `model`'s params for ZeRO-3
     sharding over the mesh's DP axes (layer-boundary buckets when
-    ``parallel.bucket_order == 'reverse_topo'``)."""
+    ``parallel.bucket_order == 'reverse_topo'``; one bucket PER layer when
+    ``parallel.fsdp_streaming`` so each gather has a single consuming
+    layer)."""
     sync_axes = _require_explicit_mesh(parallel, mesh)
     n_shards = 1
     for a in sync_axes:
         n_shards *= mesh.shape[a]
+    order = "layer" if parallel.fsdp_streaming else parallel.bucket_order
     layers = (model.param_layers()
-              if parallel.bucket_order == "reverse_topo" else None)
+              if order in ("reverse_topo", "layer") else None)
     layout = fsdp_layout(model.abstract_params(), n_shards,
-                         parallel.grad_buckets, layers=layers,
-                         order=parallel.bucket_order)
+                         parallel.grad_buckets, layers=layers, order=order)
     return layout, sync_axes
 
 
@@ -161,21 +163,46 @@ def fsdp_init_state(model: LanguageModel, parallel: ParallelConfig, mesh,
     per-device parameter/opt residency is 1/n_shards of the replicated
     step's. Returns (params_flat, opt_state, layout).
 
-    Init itself materializes the full tree once before the per-buffer
-    device_put drops residency, so the STEADY-STATE guarantee starts after
-    init — sharded per-bucket init is a ROADMAP item for model sizes whose
-    full tree cannot visit one host."""
+    Init is SHARDED per bucket: each flat buffer comes out of its own jitted
+    init with ``out_shardings=P(dp_axes)``, so the full tree never
+    materializes — transient per-device bytes stay within
+    ``layout.shard_bytes()`` plus one bucket. Bit-identical to the old
+    full-materialize init: every leaf's key derives from its tree path
+    (``models.layers.init_leaf``), not from traversal order."""
+    import functools
+
     from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.models.layers import _leaf_paths, init_leaf
 
     layout, sync_axes = fsdp_layout_for(model, parallel, mesh)
     sharding = NamedSharding(mesh, P(sync_axes))
-    params = model.init(rng)
-    flat = {k: jax.device_put(v, sharding)
-            for k, v in fsdp_shard_full(params, layout).items()}
-    opt = adamw_init(flat)
-    opt = {"m": {k: jax.device_put(v, sharding) for k, v in opt["m"].items()},
-           "v": {k: jax.device_put(v, sharding) for k, v in opt["v"].items()},
-           "step": opt["step"]}
+    paths = list(_leaf_paths(model.param_specs()).items())
+    if len(paths) != layout.num_leaves:  # pragma: no cover - structural guard
+        raise ValueError(f"param_specs has {len(paths)} leaves, layout packs "
+                         f"{layout.num_leaves}")
+
+    from repro.core.overlap import _pack_group
+
+    def group_init(key, g):
+        leaves = [None] * layout.num_leaves
+        for i in g.leaf_idx:
+            path, spec = paths[i]
+            leaves[i] = init_leaf(key, path, spec)
+        return _pack_group(leaves, g)
+
+    def group_zeros(g):
+        return jnp.zeros((g.padded,), jnp.float32)
+
+    flat, m, v = {}, {}, {}
+    with mesh:
+        for g in layout.groups:
+            flat[g.key] = jax.jit(functools.partial(group_init, g=g),
+                                  out_shardings=sharding)(rng)
+            zeros = jax.jit(functools.partial(group_zeros, g),
+                            out_shardings=sharding)
+            m[g.key], v[g.key] = zeros(), zeros()
+    opt = {"m": m, "v": v, "step": jnp.zeros((), jnp.int32)}
     return flat, opt, layout
 
 
@@ -192,7 +219,16 @@ def make_fsdp_train_step(model: LanguageModel, parallel: ParallelConfig, mesh,
     last-backward bucket's collective first, free to depart while earlier
     layers' backward computes). The AdamW update then runs OUTSIDE shard_map
     directly on the flat shards — elementwise math GSPMD keeps partitioned,
-    so optimizer state never materializes unsharded."""
+    so optimizer state never materializes unsharded.
+
+    With ``parallel.fsdp_streaming`` the top-of-step gather-all is replaced
+    by the streaming schedule: per-layer buckets are all-gathered inside
+    each consuming layer's remat region (``train_loss_streamed``), freed
+    after that layer's forward, and REGATHERED in reverse order by the
+    backward — whose AD transpose emits the per-bucket reduce-scatters
+    last-backward-first automatically. Peak live params drop from the full
+    tree to shard + a ``fsdp_working_set``-bucket working set; losses,
+    params and moments stay bit-identical to the gather-all step."""
     opt_cfg = opt_cfg or AdamWConfig()
     accum = parallel.accum_steps
     if layout is None:
@@ -204,17 +240,36 @@ def make_fsdp_train_step(model: LanguageModel, parallel: ParallelConfig, mesh,
     def loss_and_grad(params, batch):
         return jax.value_and_grad(model.train_loss)(params, batch)
 
-    def local(pflat, b):
-        from repro.sharding.rules import no_sharding
+    if parallel.fsdp_streaming:
+        stream = fsdp_stream(layout, model.param_layers(), sync_axes)
 
-        # manual region: logical sharding constraints must be inert
-        with no_sharding():
-            params = fsdp_all_gather(pflat, layout, sync_axes)
-            loss, g = accumulate_grads(loss_and_grad, params, b, accum)
-            gflat = grad_sync_fsdp(g, layout, sync_axes)
-        # psum_scatter of per-shard mean-grads -> global mean over all shards
-        gflat = {k: v / n_shards for k, v in gflat.items()}
-        return jax.lax.pmean(loss, sync_axes), gflat
+        def streamed_loss_and_grad(pflat, batch):
+            return jax.value_and_grad(model.train_loss_streamed)(
+                pflat, batch, stream)
+
+        def local(pflat, b):
+            from repro.sharding.rules import no_sharding
+
+            # manual region: logical sharding constraints must be inert
+            with no_sharding():
+                # gathers are emitted point-of-use inside the loss; AD
+                # returns grads already reduce-scattered per bucket
+                loss, gflat = accumulate_grads(streamed_loss_and_grad,
+                                               pflat, b, accum)
+            gflat = {k: v / n_shards for k, v in gflat.items()}
+            return jax.lax.pmean(loss, sync_axes), gflat
+    else:
+        def local(pflat, b):
+            from repro.sharding.rules import no_sharding
+
+            # manual region: logical sharding constraints must be inert
+            with no_sharding():
+                params = fsdp_all_gather(pflat, layout, sync_axes)
+                loss, g = accumulate_grads(loss_and_grad, params, b, accum)
+                gflat = grad_sync_fsdp(g, layout, sync_axes)
+            # psum_scatter of per-shard mean-grads -> global mean over shards
+            gflat = {k: v / n_shards for k, v in gflat.items()}
+            return jax.lax.pmean(loss, sync_axes), gflat
 
     def grads_fn(pflat, batch):
         from jax.sharding import PartitionSpec as P

@@ -53,22 +53,31 @@ def _leaf_paths(tree: PyTree, prefix=()) -> Dict[Tuple, ParamSpec]:
     return out
 
 
+def init_leaf(key: jax.Array, path: Tuple, spec: ParamSpec) -> jax.Array:
+    """Materialize ONE parameter leaf. The leaf's key is derived from its tree
+    path rather than traversal order, so initializing any SUBSET of leaves —
+    e.g. one FSDP bucket at a time under jit with sharded outputs — is
+    bit-identical to the full-tree init."""
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    k = jax.random.fold_in(key, hash(path) % (2**31))
+    fan_in = spec.shape[0] if len(spec.shape) > 1 else max(spec.shape[-1], 1)
+    scale = spec.scale if spec.scale is not None else 1.0 / math.sqrt(fan_in)
+    n = jax.random.normal(k, spec.shape, jnp.float32)
+    # barrier: under jit XLA would merge this scale into normal()'s internal
+    # sqrt(2) multiply (one rounding instead of two), so jitted per-bucket
+    # init would drift a ulp from the eager full-tree init
+    n = jax.lax.optimization_barrier(n)
+    return (n * scale).astype(spec.dtype)
+
+
 def init_from_specs(specs: PyTree, key: jax.Array) -> PyTree:
     """Materialize parameters. Each leaf gets an independent key derived from
     its tree path, so init is insensitive to traversal order."""
     flat = _leaf_paths(specs)
-
-    def make(path: Tuple, spec: ParamSpec) -> jax.Array:
-        if spec.init == "zeros":
-            return jnp.zeros(spec.shape, spec.dtype)
-        if spec.init == "ones":
-            return jnp.ones(spec.shape, spec.dtype)
-        k = jax.random.fold_in(key, hash(path) % (2**31))
-        fan_in = spec.shape[0] if len(spec.shape) > 1 else max(spec.shape[-1], 1)
-        scale = spec.scale if spec.scale is not None else 1.0 / math.sqrt(fan_in)
-        return (jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(spec.dtype)
-
-    leaves = {p: make(p, s) for p, s in flat.items()}
+    leaves = {p: init_leaf(key, p, s) for p, s in flat.items()}
 
     def rebuild(tree, prefix=()):
         if isinstance(tree, dict):

@@ -199,6 +199,75 @@ class LanguageModel:
             loss = -jnp.mean(ll)
         return loss + aux.astype(loss.dtype)
 
+    def train_loss_streamed(self, pflat, batch: Dict, stream) -> jax.Array:
+        """Streaming-ZeRO-3 train loss: `pflat` holds the per-bucket flat
+        parameter SHARDS (inside shard_map over the DP axes) and `stream` is
+        the :class:`~repro.core.overlap.FsdpStream` gather/free schedule.
+
+        Each layer all-gathers exactly its own bucket inside its remat
+        region: the gather is emitted just before the consuming compute, the
+        gathered buffer dies after the layer's forward, and the backward
+        rematerializes layers in reverse order — regathering buckets
+        last-backward-first, with AD transposing each tiled all-gather into
+        the bucket's tiled reduce-scatter. The embed and head buckets gather
+        un-checkpointed at their point of use: the take-backward never needs
+        the embedding table primal (its transpose is a scatter of the
+        cotangent), and the head weight's saved residual spans only the
+        forward/backward boundary where it IS the working set — while
+        checkpointing them would restructure the softmax backward and break
+        bit-identity with the gather-all step. Peak live params ≈ shard + a
+        bounded working set, instead of the full tree.
+
+        Gradients w.r.t. `pflat` come back already reduce-scattered (the SUM
+        over the DP shards — divide by the shard count for the mean). Uses
+        the unfused unembed path (custom-VJP fused xent is rejected under
+        shard_map manual axes), like every explicit-schedule caller."""
+        cfg = self.cfg
+        if self.opt.scan_layers:
+            raise ValueError(
+                "train_loss_streamed needs the unrolled stack "
+                "(scan_layers=False): per-layer gather placement requires "
+                "visible layer boundaries; the scanned lowering streams via "
+                "stack_apply's scan-carried gather instead")
+        if cfg.family == "encdec":
+            raise ValueError(
+                "train_loss_streamed supports decoder-only stacks (the "
+                "encoder's cross-attention KV is consumed by every decoder "
+                "layer, so its buckets have no single free point)")
+        stack0 = 1
+        head_depth = stack0 + cfg.num_layers
+        head_depths = (head_depth, 0) if cfg.tie_embeddings else (head_depth,)
+
+        p0 = stream.materialize(pflat, 0)
+        tokens = with_logical(batch["tokens"], ("batch", "seq"))
+        x = self._embed(p0, tokens)
+        x = self._prepend_frontend(p0, x, batch)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        x = with_logical(x, ("batch", "seq", None))
+
+        def layer_stream(i, flat):
+            return stream.materialize(flat, stack0 + i)["layers"][i]
+
+        stack_flat = [stream.flat_at(pflat, stack0 + i)
+                      for i in range(cfg.num_layers)]
+        x, _, aux = tfm.stack_apply(
+            stack_flat, x, cfg, positions, "train", None, None,
+            self.opt.attn_impl, remat=self.opt.remat,
+            unroll_chunks=self.opt.unroll_chunks,
+            moe_chunks=self.opt.moe_a2a_chunks, stream=layer_stream)
+
+        if cfg.family == "vlm":   # strip patch positions from the loss
+            x = x[:, cfg.num_vision_patches:]
+
+        ph = stream.materialize(pflat, *head_depths)
+        logits = self._unembed(ph, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        targets = batch["targets"]
+        ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        loss = -jnp.mean(ll)
+        return loss + aux.astype(loss.dtype)
+
     def prefill(self, params, batch: Dict,
                 max_len: Optional[int] = None) -> Tuple[jax.Array, Any]:
         """`max_len` sizes the ring caches for the decode phase that follows;

@@ -220,24 +220,37 @@ def stack_specs(cfg: ModelConfig, scan: bool, dtype=jnp.bfloat16,
 def stack_apply(params, x, cfg: ModelConfig, positions, mode: str,
                 caches, pos, attn_impl: str, remat: str = "none",
                 enc_out=None, unroll_chunks: bool = False,
-                moe_chunks: int = 1):
+                moe_chunks: int = 1, stream=None):
     """Run the full stack. `params` matches stack_specs' layout (stacked tree
-    for scan, list for unrolled). Returns (x, new_caches, aux_total)."""
+    for scan, list for unrolled). Returns (x, new_caches, aux_total).
+
+    `stream` is the streaming-ZeRO-3 hook: a callable ``(i, p_l) -> params``
+    that materializes layer `i`'s parameters (all-gather of its shard-resident
+    bucket) INSIDE the layer's remat region, so the gather is emitted just
+    before the consuming compute, the gathered buffer dies after the layer's
+    forward, and the backward's rematerialization regathers it in reverse
+    layer order. Unrolled stacks pass each layer's flat shard dict as `p_l`
+    with its index `i`; the scanned lowering uses the scan-carried gather —
+    `p_l` is the body's per-layer slice of the (sharded) stacked tree and `i`
+    is None. Streaming forces remat in train mode (without it every gathered
+    buffer would survive to the backward and there is no memory win)."""
     kinds = block_kinds(cfg)
     scanned = not isinstance(params, list)
 
     def wrap(f):
-        if remat == "full" and mode == "train":
-            return jax.checkpoint(f)
         if remat == "dots" and mode == "train":
             return jax.checkpoint(
                 f, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+        if (remat == "full" or stream is not None) and mode == "train":
+            return jax.checkpoint(f)
         return f
 
     if scanned:
         kind = kinds[0]
 
         def f(p_l, xc, cache_l):
+            if stream is not None:
+                p_l = stream(None, p_l)
             return layer_apply(p_l, xc, cfg, kind, positions, mode, cache_l,
                                pos, attn_impl, enc_out, unroll_chunks,
                                moe_chunks=moe_chunks)
@@ -269,7 +282,9 @@ def stack_apply(params, x, cfg: ModelConfig, positions, mode: str,
     for i, (p_l, kind) in enumerate(zip(params, kinds)):
         cache_l = None if caches is None else caches[i]
 
-        def f(pp, xx, cc, kk=kind):
+        def f(pp, xx, cc, kk=kind, ii=i):
+            if stream is not None:
+                pp = stream(ii, pp)
             return layer_apply(pp, xx, cfg, kk, positions, mode, cc, pos,
                                attn_impl, enc_out, unroll_chunks,
                                moe_chunks=moe_chunks)

@@ -82,6 +82,10 @@ def test_render_table_shape():
         {"devices": 2, "metric": "sweeps_per_s",
          "two_phase": 5.0, "hdot": 5.5, "hdot_two_phase_ratio": 1.1,
          "fsdp": 4.5, "fsdp_two_phase_ratio": 0.9},
+    ]}, "mem": {"rows": [
+        {"devices": 4, "metric": "peak_live_param_bytes",
+         "streaming": 625280.0, "gather_all": 1579904.0,
+         "mem_saving_ratio": 2.5266},
     ]}, "broken": {"error": "boom"}}
     table = docs_sync.render_table(quick)
     lines = table.splitlines()
@@ -90,6 +94,8 @@ def test_render_table_shape():
             in lines)
     assert ("| demo | 2 | - | sweeps_per_s | 5.00 | 5.50 | 1.10x | 0.90x |"
             in lines)
+    assert ("| mem | 4 | - | peak_live_param_bytes | 1579904 | 625280 "
+            "| 2.53x | - |" in lines)
     assert any("ERROR" in ln for ln in lines)
 
 
@@ -152,6 +158,32 @@ def test_bench_quick_tracks_rebalance_row():
     assert all(r["metric"] == "steps_per_s" for r in rows), rows
     assert all(r["devices"] == 1 for r in rows), rows
     assert quick["rebalance"]["hdot_two_phase_ratio"] > 1.2, quick["rebalance"]
+
+
+def test_bench_quick_tracks_fsdp_mem_row():
+    """The committed trajectory must carry the streaming ZeRO-3 memory probe
+    (PR 10 onward): per-device peak live param bytes, streaming vs the
+    top-of-step gather-all, with losses bit-identical and the streaming peak
+    within the shard + fsdp_working_set bound. ci_gate fails when the saving
+    ratio dips to 1 or below."""
+    from benchmarks import docs_sync
+
+    quick = docs_sync.load_quick()
+    rows = quick["fsdp_mem"]["rows"]
+    assert rows, "fsdp_mem suite lost its rows"
+    assert all(r["metric"] == "peak_live_param_bytes" for r in rows), rows
+    assert all(r["loss_bit_equal"] for r in rows), rows
+    assert all(r["within_working_set_bound"] for r in rows), rows
+    assert all(r["streaming"] < r["gather_all"] for r in rows), rows
+    assert quick["fsdp_mem"]["mem_saving_ratio"] > 1.0, quick["fsdp_mem"]
+
+
+def test_overlap_doc_covers_streaming_zero3():
+    text = (REPO / "docs" / "overlap.md").read_text()
+    for ref in ("fsdp_streaming", "fsdp_working_set", "train_loss_streamed",
+                "restore_fsdp_checkpoint", "lm_fsdp_streaming",
+                "AG-ADJACENCY", "fsdp_init_state"):
+        assert ref in text, f"docs/overlap.md lost {ref}"
 
 
 def test_overlap_doc_covers_rebalancing():

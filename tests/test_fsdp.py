@@ -271,3 +271,203 @@ def test_param_shard_needs_explicit_mesh():
     model = _model("qwen3-8b")
     with pytest.raises(ValueError, match="param_shard"):
         fsdp_layout_for(model, ParallelConfig(param_shard=True), mesh=None)
+
+
+# ------------------------------------------------------- streaming ZeRO-3
+def _streaming_pair():
+    """The canonical comparator configs: streaming vs gather-all on the SAME
+    per-layer layout, with the model options matched so the two lowerings
+    are numerically the same program (unfused xent — the streamed loss uses
+    the log_softmax path — and remat='full' on both)."""
+    from repro.config.base import ParallelConfig
+
+    stream = ParallelConfig(param_shard=True, fsdp_streaming=True,
+                            scan_layers=False, remat="full")
+    gather = ParallelConfig(param_shard=True, scan_layers=False,
+                            remat="full", bucket_order="layer")
+    return stream, gather
+
+
+def test_fsdp_streaming_config_guards():
+    """Streaming forfeits its memory bound under partial remat and has no
+    scanned lowering — both must fail loudly at config time."""
+    from repro.config.base import ParallelConfig
+
+    with pytest.raises(ValueError, match="remat"):
+        ParallelConfig(param_shard=True, fsdp_streaming=True,
+                       scan_layers=False, remat="dots")
+    with pytest.raises(ValueError, match="scan_layers"):
+        ParallelConfig(param_shard=True, fsdp_streaming=True,
+                       scan_layers=True, remat="full")
+    with pytest.raises(ValueError, match="param_shard"):
+        ParallelConfig(param_shard=False, fsdp_streaming=True,
+                       scan_layers=False, remat="full")
+
+
+def test_fsdp_streaming_trainer_bit_identical_to_gather_all(tmp_path):
+    """The tentpole contract on one device: the streaming schedule (per-layer
+    gather inside each remat region, backward regather) produces BIT-identical
+    losses, params and AdamW moments to the top-of-step gather-all step over
+    multiple steps. Exact equality, not allclose — streaming only moves WHEN
+    buffers are gathered, never what is computed."""
+    from repro.config.base import RunConfig, TrainConfig
+    from repro.config.registry import get_arch
+    from repro.launch.mesh import make_mesh
+    from repro.models.model import ModelOptions
+    from repro.runtime.trainer import Trainer
+
+    cfg = get_arch("qwen3-8b").reduced()
+    train = TrainConfig(global_batch=2, seq_len=16, warmup_steps=2,
+                        total_steps=8, checkpoint_every=10**6,
+                        checkpoint_dir=str(tmp_path))
+    mesh = make_mesh((1,), ("data",))
+    opts = ModelOptions(attn_impl="dense", scan_layers=False, remat="full",
+                        fused_xent=False)
+    spar, gpar = _streaming_pair()
+    outs = {}
+    for name, par in {"stream": spar, "gather": gpar}.items():
+        t = Trainer(RunConfig(cfg, par, train), mesh=mesh, options=opts)
+        t.train(3)
+        outs[name] = (t.params, t.opt_state,
+                      [m["loss"] for m in t.metrics_log])
+    assert outs["stream"][2] == outs["gather"][2]
+    for k in outs["stream"][0]:
+        np.testing.assert_array_equal(
+            np.asarray(outs["stream"][0][k], np.float32),
+            np.asarray(outs["gather"][0][k], np.float32))
+        for mom in ("m", "v"):
+            np.testing.assert_array_equal(
+                np.asarray(outs["stream"][1][mom][k]),
+                np.asarray(outs["gather"][1][mom][k]))
+
+
+def test_fsdp_sharded_init_bit_identical_to_full_materialize():
+    """Per-bucket jitted init (fsdp_init_state) must produce the SAME bits as
+    materializing the whole tree eagerly and sharding it — leaf keys derive
+    from tree paths, not traversal order, and the optimization_barrier in
+    init_leaf pins the eager two-rounding sequence under jit."""
+    from repro.config.base import ParallelConfig
+    from repro.launch.mesh import make_mesh
+    from repro.launch.steps import fsdp_init_state, fsdp_layout_for
+
+    model = _model("qwen3-8b", scan=False)
+    par = ParallelConfig(param_shard=True, fsdp_streaming=True,
+                         scan_layers=False, remat="full")
+    mesh = make_mesh((1,), ("data",))
+    rng = jax.random.PRNGKey(7)
+    pflat, opt, layout = fsdp_init_state(model, par, mesh, rng)
+    full = fsdp_shard_full(model.init(rng), layout)
+    assert set(pflat) == set(full)
+    for k in pflat:
+        np.testing.assert_array_equal(np.asarray(pflat[k], np.float32),
+                                      np.asarray(full[k], np.float32))
+    for mom in ("m", "v"):
+        for k, v in opt[mom].items():
+            assert v.dtype == np.float32
+            assert not np.asarray(v).any()
+    assert int(opt["step"]) == 0
+
+
+def test_fsdp_streaming_stream_materialize_matches_unshard():
+    """FsdpStream.materialize on a single shard reproduces exactly the leaves
+    of its depths (None holes elsewhere), matching the full unshard."""
+    from repro.config.base import ParallelConfig
+    from repro.core.overlap import fsdp_stream
+    from repro.launch.mesh import make_mesh
+    from repro.launch.steps import fsdp_init_state
+
+    model = _model("qwen3-8b", scan=False)
+    par, _ = _streaming_pair()
+    mesh = make_mesh((1,), ("data",))
+    pflat, _, layout = fsdp_init_state(model, par, mesh,
+                                       jax.random.PRNGKey(0))
+    stream = fsdp_stream(layout, model.param_layers(), ("data",))
+    full = fsdp_unshard_full(pflat, layout)
+    depths = stream.depths
+    assert depths[0] == 0 and len(depths) == 2 + model.cfg.num_layers
+
+    from jax.sharding import PartitionSpec as P
+
+    got = jax.shard_map(                             # first layer bucket
+        lambda flat: stream.materialize(flat, depths[1]),
+        mesh=mesh, in_specs=(P("data"),), out_specs=P(),
+        check_vma=False)(pflat)
+    tags = jax.tree.leaves(model.param_layers())
+    for i, (g, w) in enumerate(zip(jax.tree.leaves(full),
+                                   jax.tree.leaves(
+                                       got, is_leaf=lambda x: x is None))):
+        if tags[i] == depths[1]:
+            np.testing.assert_array_equal(np.asarray(g, np.float32),
+                                          np.asarray(w, np.float32))
+        else:
+            assert w is None
+
+
+# --------------------------------------------------- checkpoint re-layout
+def test_restore_fsdp_checkpoint_relayout_roundtrip(tmp_path):
+    """Portability: a checkpoint written under one FsdpLayout imports under a
+    DIFFERENT bucket cut bit-exactly — params AND f32 moments — via the
+    unshard-with-old / reshard-with-new path."""
+    from repro.checkpoint import restore_fsdp_checkpoint, save_checkpoint
+    from repro.config.base import ParallelConfig
+    from repro.core.overlap import fsdp_relayout
+    from repro.launch.mesh import make_mesh
+    from repro.launch.steps import fsdp_init_state, fsdp_layout_for
+
+    model = _model("qwen3-8b", scan=False)
+    mesh = make_mesh((1,), ("data",))
+    old_par = ParallelConfig(param_shard=True, grad_buckets=2,
+                             scan_layers=False)
+    new_par = ParallelConfig(param_shard=True, fsdp_streaming=True,
+                             scan_layers=False, remat="full")
+    pflat, opt, old_layout = fsdp_init_state(model, old_par, mesh,
+                                             jax.random.PRNGKey(3))
+    new_layout, _ = fsdp_layout_for(model, new_par, mesh)
+    assert ({g.key for g in old_layout.groups}
+            != {g.key for g in new_layout.groups})
+    save_checkpoint(str(tmp_path), 5, {"params": pflat, "opt": opt})
+
+    step, state, _ = restore_fsdp_checkpoint(str(tmp_path), old_layout,
+                                             new_layout)
+    assert step == 5
+    want = fsdp_relayout(pflat, old_layout, new_layout)
+    assert set(state["params"]) == {g.key for g in new_layout.groups}
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(state["params"][k],
+                                                 np.float32),
+                                      np.asarray(want[k], np.float32))
+    for mom in ("m", "v"):
+        want_m = fsdp_relayout(opt[mom], old_layout, new_layout)
+        for k in want_m:
+            assert state["opt"][mom][k].dtype == np.float32
+            np.testing.assert_array_equal(np.asarray(state["opt"][mom][k]),
+                                          np.asarray(want_m[k]))
+    assert int(state["opt"]["step"]) == 0
+
+
+def test_structural_restore_across_layouts_raises_value_error(tmp_path):
+    """Restoring a checkpoint whose flat buffers were cut under a different
+    layout must raise a ValueError NAMING both layouts' bucket keys and
+    pointing at restore_fsdp_checkpoint — not a bare KeyError."""
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    from repro.config.base import ParallelConfig
+    from repro.launch.mesh import make_mesh
+    from repro.launch.steps import fsdp_init_state, fsdp_layout_for
+
+    model = _model("qwen3-8b", scan=False)
+    mesh = make_mesh((1,), ("data",))
+    old_par = ParallelConfig(param_shard=True, grad_buckets=2,
+                             scan_layers=False)
+    new_par = ParallelConfig(param_shard=True, fsdp_streaming=True,
+                             scan_layers=False, remat="full")
+    pflat, opt, old_layout = fsdp_init_state(model, old_par, mesh,
+                                             jax.random.PRNGKey(3))
+    save_checkpoint(str(tmp_path), 1, {"params": pflat, "opt": opt})
+    new_layout, _ = fsdp_layout_for(model, new_par, mesh)
+    target = {"params": {g.key: jax.ShapeDtypeStruct((g.padded,), g.dtype)
+                         for g in new_layout.groups}}
+    with pytest.raises(ValueError,
+                       match="restore_fsdp_checkpoint") as err:
+        restore_checkpoint(str(tmp_path), target)
+    for g in new_layout.groups:
+        assert g.key in str(err.value)

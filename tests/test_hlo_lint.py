@@ -87,7 +87,7 @@ ENTRY main {
 # ------------------------------------------------------------------- rules
 def test_registry_is_complete():
     ids = [r.id for r in ALL_RULES]
-    assert len(ids) == len(set(ids)) == 7
+    assert len(ids) == len(set(ids)) == 8
     assert set(RULES_BY_ID) == set(ids)
     for r in ALL_RULES:
         assert r.fix_hint and (r.__doc__ or "").strip()
@@ -226,6 +226,43 @@ def test_no_overlap_window_needs_independent_compute():
   ROOT r = f32[16] reshape(ar)""")
     assert "NO-OVERLAP-WINDOW" not in _rules(lint_text(comm_only,
                                                        LintContext()))
+
+
+def test_ag_adjacency_counts_live_gathered_buffers():
+    # ag1's result survives (via the non-compute reshape) to a consumer
+    # BELOW ag2's definition, so both gathered buffers are live at once
+    body = """\
+  p0 = f32[16] parameter(0)
+  p1 = f32[16] parameter(1)
+  ag1 = f32[32] all-gather(p0), channel_id=1, dimensions={0}
+  u1 = f32[32] multiply(ag1, ag1)
+  ag2 = f32[32] all-gather(p1), channel_id=2, dimensions={0}
+  u2 = f32[32] multiply(ag2, ag2)
+  keep = f32[32] reshape(ag1)
+  late = f32[32] add(keep, u2)
+  ROOT r = f32[32] add(late, u1)"""
+    over = lint_text(_module(body),
+                     LintContext(extra={"fsdp_working_set": 1}))
+    assert "AG-ADJACENCY" in _rules(over)
+    assert any("2 gathered" in f.message for f in over.findings)
+    within = lint_text(_module(body),
+                       LintContext(extra={"fsdp_working_set": 2}))
+    assert "AG-ADJACENCY" not in _rules(within)
+    # rule is inactive unless the target opts in via the ctx key
+    inactive = lint_text(_module(body), LintContext())
+    assert "AG-ADJACENCY" not in _rules(inactive)
+    # disjoint spans: ag1's buffer dies before ag2 is even defined
+    streamed = """\
+  p0 = f32[16] parameter(0)
+  p1 = f32[16] parameter(1)
+  ag1 = f32[32] all-gather(p0), channel_id=1, dimensions={0}
+  u1 = f32[32] multiply(ag1, ag1)
+  ag2 = f32[32] all-gather(p1), channel_id=2, dimensions={0}
+  u2 = f32[32] multiply(ag2, ag2)
+  ROOT r = f32[32] add(u1, u2)"""
+    ok = lint_text(_module(streamed),
+                   LintContext(extra={"fsdp_working_set": 1}))
+    assert "AG-ADJACENCY" not in _rules(ok)
 
 
 def test_donation_lost_reads_module_header():
